@@ -1,0 +1,51 @@
+"""Shared benchmark helpers: latency stats + CSV rows.
+
+Network costs are SIMULATED (single-host container): NetModel sleeps
+latency + bytes/bandwidth per modeled hop (DESIGN.md §2).  Absolute numbers
+are therefore model-determined; the *relative* effects (what each paper
+figure shows) are what we validate.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Callable, Dict, List, Sequence
+
+import numpy as np
+
+
+def percentile(xs: Sequence[float], p: float) -> float:
+    return float(np.percentile(np.asarray(xs), p))
+
+
+def run_requests(fn: Callable[[int], object], n: int,
+                 concurrency: int = 1) -> List[float]:
+    """Run n requests (fn(i) blocking) and return per-request latencies."""
+    lats: List[float] = []
+    if concurrency <= 1:
+        for i in range(n):
+            t0 = time.perf_counter()
+            fn(i)
+            lats.append(time.perf_counter() - t0)
+        return lats
+    import concurrent.futures as cf
+    with cf.ThreadPoolExecutor(concurrency) as pool:
+        def timed(i):
+            t0 = time.perf_counter()
+            fn(i)
+            return time.perf_counter() - t0
+        lats = list(pool.map(timed, range(n)))
+    return lats
+
+
+def row(name: str, lats_or_us, derived: str) -> str:
+    if isinstance(lats_or_us, (int, float)):
+        us = float(lats_or_us)
+    else:
+        us = statistics.median(lats_or_us) * 1e6
+    return f"{name},{us:.1f},{derived}"
+
+
+def summarize(lats: List[float]) -> Dict[str, float]:
+    return {"p50": percentile(lats, 50) * 1e3,
+            "p99": percentile(lats, 99) * 1e3}

@@ -1,0 +1,52 @@
+"""Paper Fig 4: operator fusion on linear chains — latency vs chain length
+x payload size, fused vs unfused.  Expectation: unfused grows linearly with
+chain length (data shipped per hop); fused stays flat."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import percentile, row, run_requests
+from repro.core.dataflow import Dataflow
+from repro.core.table import Table
+from repro.runtime.netmodel import NetModel
+from repro.runtime.runtime import Runtime
+
+
+def _chain_flow(length: int):
+    def ident(x: np.ndarray) -> np.ndarray:
+        return x
+    fl = Dataflow([("x", np.ndarray)])
+    node = fl.source
+    for _ in range(length):
+        node = node.map(ident, names=["x"])
+    fl.output = node
+    return fl
+
+
+def run(n_requests: int = 12):
+    rows = []
+    net = NetModel(latency_s=0.5e-3, bandwidth=1e9)
+    for size_kb in (100, 1000):
+        payload = np.zeros(size_kb * 1024 // 8, np.float64)
+        for length in (2, 6, 10):
+            lats = {}
+            for fused in (False, True):
+                rt = Runtime(n_cpu=4, net=net)
+                try:
+                    fl = _chain_flow(length)
+                    fl.deploy(rt, fusion=fused)
+                    t = Table([("x", np.ndarray)], [(payload,)])
+                    ls = run_requests(
+                        lambda i: fl.execute(t).result(timeout=30),
+                        n_requests)
+                    lats[fused] = ls
+                finally:
+                    rt.stop()
+            speed = percentile(lats[False], 50) / percentile(lats[True], 50)
+            rows.append(row(
+                f"fusion/len{length}/{size_kb}KB/unfused", lats[False],
+                f"p99_ms={percentile(lats[False], 99)*1e3:.1f}"))
+            rows.append(row(
+                f"fusion/len{length}/{size_kb}KB/fused", lats[True],
+                f"speedup={speed:.2f}x"))
+    return rows

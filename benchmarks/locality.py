@@ -1,0 +1,61 @@
+"""Paper Fig 7: data locality — naive vs fusion-only vs fusion+dynamic
+dispatch, varying object size.  Expectation: order-of-magnitude win for
+large objects with both rewrites on (cache hits avoid modeled transfers)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import percentile, row, run_requests
+from repro.core.dataflow import Dataflow
+from repro.core.table import Table
+from repro.runtime.netmodel import NetModel
+from repro.runtime.runtime import Runtime
+
+
+def _flow():
+    """pick object -> lookup -> compute (paper's representative pipeline)."""
+    def pick(i: int) -> tuple[int, str]:
+        return i, f"obj{i % 12}"
+
+    def compute(i: int, key: str, lookup) -> float:
+        return float(np.sum(lookup))
+
+    fl = Dataflow([("i", int)])
+    lk = fl.map(pick, names=["i", "key"]).lookup("key", column=True)
+    fl.output = lk.map(compute, names=["s"])
+    return fl
+
+
+def run(n_requests: int = 30):
+    rows = []
+    net = NetModel(latency_s=0.5e-3, bandwidth=1e9)
+    for size_kb in (64, 8192):
+        results = {}
+        for mode, flags in (("naive", {}),
+                            ("fusion", {"fusion": True}),
+                            ("fusion+dispatch", {"locality": True,
+                                                 "fusion": True})):
+            rt = Runtime(n_cpu=4, net=net, cache_bytes=30 << 20)
+            try:
+                obj = np.zeros(size_kb * 1024 // 8, np.float64)
+                for i in range(12):
+                    rt.kvs.put(f"obj{i}", obj, charge=False)
+                fl = _flow()
+                fl.deploy(rt, **flags)
+                # warm caches (paper does one pass first)
+                for i in range(12):
+                    fl.execute(Table([("i", int)],
+                                     [(i,)])).result(timeout=60)
+                ls = run_requests(
+                    lambda i: fl.execute(Table([("i", int)],
+                                               [(i,)])).result(timeout=60),
+                    n_requests)
+                results[mode] = ls
+            finally:
+                rt.stop()
+        base = percentile(results["naive"], 50)
+        for mode, ls in results.items():
+            rows.append(row(
+                f"locality/{size_kb}KB/{mode}", ls,
+                f"speedup={base / percentile(ls, 50):.2f}x"))
+    return rows

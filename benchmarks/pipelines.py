@@ -1,0 +1,213 @@
+"""Paper Fig 13 / §5.2: the four real prediction pipelines, optimized
+Cloudflow vs unoptimized per-stage execution ("Sagemaker-like": every stage
+a separate function, data shipped between stages).
+
+Models are reduced variants of the assigned zoo archs (black-box operators,
+exactly the paper's usage).  Expectation: optimized >= ~1.5-2x median.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import percentile, row, run_requests
+from repro.configs import get_tiny_config
+from repro.core.dataflow import Dataflow
+from repro.core.table import Table
+from repro.models import build_model
+from repro.runtime.netmodel import NetModel
+from repro.runtime.runtime import Runtime
+
+NET = NetModel(latency_s=0.5e-3, bandwidth=1e9)
+
+
+def _toy_model(arch: str, seed: int):
+    cfg = get_tiny_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+
+    @jax.jit
+    def forward(tokens):
+        logits, _ = model.logits(params, {"tokens": tokens}, remat=False)
+        return logits[:, -1]
+
+    forward(jnp.ones((1, 16), jnp.int32)).block_until_ready()
+    return cfg, forward
+
+
+# ---------------------------------------------------------------------------
+def image_cascade_flow():
+    """ResNet/Inception cascade analogue: yi-tiny then glm-tiny."""
+    cfg1, m1 = _toy_model("yi-9b", 0)
+    cfg2, m2 = _toy_model("glm4-9b", 1)
+
+    def preproc(img: np.ndarray) -> np.ndarray:
+        return (img.reshape(-1)[:16] * 255).astype(np.int32) % 500
+
+    def simple(tokens: np.ndarray) -> tuple[np.ndarray, float]:
+        out = np.asarray(m1(jnp.asarray(tokens)[None]))[0]
+        conf = float(jax.nn.softmax(out).max())
+        return tokens, conf
+
+    def low_conf(tokens: np.ndarray, conf: float) -> bool:
+        return conf < 0.9
+
+    def complex_m(tokens: np.ndarray, conf: float) -> tuple[float,]:
+        out = np.asarray(m2(jnp.asarray(tokens)[None]))[0]
+        return (float(out.max()),)
+
+    fl = Dataflow([("img", np.ndarray)])
+    s = fl.map(preproc, names=["tokens"]).map(simple, names=["tokens",
+                                                             "conf"])
+    c = s.filter(low_conf).map(complex_m, names=["score"])
+    fl.output = s.join(c, how="left")
+    inputs = [Table([("img", np.ndarray)],
+                    [(np.random.default_rng(i).random(64 * 64),)])
+              for i in range(8)]
+    return fl, inputs, {"fusion": True}
+
+
+def video_flow():
+    """YOLO + 2x ResNet analogue over stub frames; union + groupby/count."""
+    _, det = _toy_model("yi-9b", 2)
+    _, cls1 = _toy_model("glm4-9b", 3)
+    _, cls2 = _toy_model("granite-34b", 4)
+
+    def detect(frames: np.ndarray) -> np.ndarray:
+        toks = (frames.reshape(-1)[:16] * 255).astype(np.int32) % 500
+        _ = np.asarray(det(jnp.asarray(toks)[None]))
+        return toks
+
+    def classify_people(toks: np.ndarray) -> tuple[str, float]:
+        out = np.asarray(cls1(jnp.asarray(toks)[None]))[0]
+        return f"p{int(out.argmax()) % 4}", float(out.max())
+
+    def classify_vehicles(toks: np.ndarray) -> tuple[str, float]:
+        out = np.asarray(cls2(jnp.asarray(toks)[None]))[0]
+        return f"v{int(out.argmax()) % 4}", float(out.max())
+
+    fl = Dataflow([("frames", np.ndarray)])
+    d = fl.map(detect, names=["toks"])
+    a = d.map(classify_people, names=["label", "conf"])
+    b = d.map(classify_vehicles, names=["label", "conf"])
+    fl.output = a.union(b).groupby("label").agg("count", "label")
+    inputs = [Table([("frames", np.ndarray)],
+                    [(np.random.default_rng(i).random(30 * 128),)])
+              for i in range(8)]
+    return fl, inputs, {"fusion": True}
+
+
+def nmt_flow():
+    """langid -> route to one of two translation models (whisper enc-dec
+    tiny as the seq2seq stand-in); competitive execution enabled."""
+    _, langid = _toy_model("rwkv6-1.6b", 5)
+    _, fr = _toy_model("whisper-medium", 6)
+    _, de = _toy_model("whisper-medium", 7)
+
+    def classify(text: str) -> tuple[np.ndarray, str]:
+        toks = (np.frombuffer(text.encode()[:16].ljust(16), np.uint8)
+                .astype(np.int32) % 500)
+        out = np.asarray(langid(jnp.asarray(toks)[None]))[0]
+        return toks, ("fr" if float(out[0]) > 0 else "de")
+
+    def is_fr(toks: np.ndarray, lang: str) -> bool:
+        return lang == "fr"
+
+    def is_de(toks: np.ndarray, lang: str) -> bool:
+        return lang == "de"
+
+    def translate_fr(toks: np.ndarray, lang: str) -> str:
+        out = np.asarray(fr(jnp.asarray(toks)[None]))[0]
+        return f"fr:{int(out.argmax())}"
+
+    def translate_de(toks: np.ndarray, lang: str) -> str:
+        out = np.asarray(de(jnp.asarray(toks)[None]))[0]
+        return f"de:{int(out.argmax())}"
+
+    fl = Dataflow([("text", str)])
+    c = fl.map(classify, names=["toks", "lang"],
+               high_variance=True)
+    a = c.filter(is_fr).map(translate_fr, names=["out"])
+    b = c.filter(is_de).map(translate_de, names=["out"])
+    fl.output = a.union(b)
+    inputs = [Table([("text", str)], [(f"sentence number {i}",)])
+              for i in range(8)]
+    # competitive execution needs spare machines; on this 1-core container
+    # replicas contend, so the optimized config uses fusion (paper §5.2.3
+    # reports Cloudflow-without-competition ~ parity, competition winning
+    # only with extra resources)
+    return fl, inputs, {"fusion": True}
+
+
+def recommender_flow(rt_setup):
+    """Facebook-style DNN recommender: user vector + 10MB-class product
+    category lookup + matmul scoring (paper: locality-dominated)."""
+    def req(user: int, clicks: int) -> tuple[int, str]:
+        return user, f"cat{clicks % 10}"
+
+    def score(user: int, cat: str, lookup) -> tuple[int,]:
+        vec = np.random.default_rng(user).random(64)
+        scores = lookup @ vec
+        return (int(np.argmax(scores)),)
+
+    fl = Dataflow([("user", int), ("clicks", int)])
+    lk = fl.map(req, names=["user", "cat"]).lookup("cat", column=True)
+    fl.output = lk.map(score, names=["top"])
+    inputs = [Table([("user", int), ("clicks", int)], [(i, i * 3)])
+              for i in range(10)]
+
+    def setup(rt):
+        cat = np.random.default_rng(0).random((4096, 64))  # ~2MB
+        for i in range(10):
+            rt.kvs.put(f"cat{i}", cat, charge=False)
+        # one warm pass so caches are populated (paper does the same)
+        for t in inputs:
+            fl.execute(t).result(timeout=60)
+
+    rt_setup.append(setup)
+    return fl, inputs, {"fusion": True, "locality": True}
+
+
+def _measure(fl, inputs, flags, *, n: int = 16, setup=None):
+    results = {}
+    for label, use_flags in (("unopt", {}), ("opt", flags)):
+        rt = Runtime(n_cpu=6, net=NET)
+        try:
+            fl.deploy(rt, **use_flags)
+            if setup:
+                setup(rt)
+            ls = run_requests(
+                lambda i: fl.execute(inputs[i % len(inputs)]).result(
+                    timeout=60), n, concurrency=2)
+            results[label] = ls
+        finally:
+            rt.stop()
+    return results
+
+
+def run(n: int = 16):
+    rows = []
+    for name, builder in (("cascade", image_cascade_flow),
+                          ("video", video_flow),
+                          ("nmt", nmt_flow)):
+        fl, inputs, flags = builder()
+        res = _measure(fl, inputs, flags, n=n)
+        speed = (percentile(res["unopt"], 50)
+                 / percentile(res["opt"], 50))
+        rows.append(row(f"pipeline/{name}/unopt", res["unopt"],
+                        f"p99_ms={percentile(res['unopt'],99)*1e3:.1f}"))
+        rows.append(row(f"pipeline/{name}/opt", res["opt"],
+                        f"speedup={speed:.2f}x"))
+    setup_holder = []
+    fl, inputs, flags = recommender_flow(setup_holder)
+    res = _measure(fl, inputs, flags, n=n, setup=setup_holder[0])
+    speed = percentile(res["unopt"], 50) / percentile(res["opt"], 50)
+    rows.append(row("pipeline/recommender/unopt", res["unopt"],
+                    f"p99_ms={percentile(res['unopt'],99)*1e3:.1f}"))
+    rows.append(row("pipeline/recommender/opt", res["opt"],
+                    f"speedup={speed:.2f}x"))
+    return rows

@@ -1,0 +1,33 @@
+"""Roofline summary rows from the dry-run JSONs (results/dryrun)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+
+def run(results_dir: str = "results/dryrun"):
+    rows = []
+    files = sorted(glob.glob(os.path.join(results_dir, "*__16x16.json")))
+    if not files:
+        return [row("roofline/none", 0.0,
+                    "run `python -m repro.launch.dryrun --batch-archs all`")]
+    for f in files:
+        j = json.load(open(f))
+        tag = f"roofline/{j['arch']}/{j['shape']}"
+        if "skipped" in j:
+            rows.append(row(tag, 0.0, "skipped"))
+            continue
+        if "error" in j:
+            rows.append(row(tag, 0.0, "ERROR"))
+            continue
+        r = j["roofline"]
+        us = r["step_time_lower_bound"] * 1e6 if "step_time_lower_bound" \
+            in r else max(r["t_compute_s"], r["t_memory_s"],
+                          r["t_collective_s"]) * 1e6
+        rows.append(row(
+            tag, us,
+            f"bottleneck={r['bottleneck']};useful={r['useful_ratio']:.2f}"))
+    return rows

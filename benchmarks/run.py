@@ -1,0 +1,62 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout).  Network costs in
+runtime benchmarks are modeled (single-host container) — see DESIGN.md §2;
+the validated claims are the relative effects from the paper's figures.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fusion,batching] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = ("fusion", "competitive", "autoscaling", "locality", "batching",
+          "pipelines", "roofline")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None,
+                   help=f"comma list from {SUITES}")
+    p.add_argument("--fast", action="store_true",
+                   help="fewer requests per point")
+    args = p.parse_args()
+    only = set(args.only.split(",")) if args.only else set(SUITES)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    rows = []
+
+    def emit(new_rows):
+        for r in new_rows:
+            print(r, flush=True)
+        rows.extend(new_rows)
+
+    if "fusion" in only:
+        from benchmarks import fusion_chain
+        emit(fusion_chain.run(n_requests=6 if args.fast else 12))
+    if "competitive" in only:
+        from benchmarks import competitive
+        emit(competitive.run(n_requests=15 if args.fast else 40))
+    if "autoscaling" in only:
+        from benchmarks import autoscaling
+        emit(autoscaling.run(duration_s=6.0 if args.fast else 12.0))
+    if "locality" in only:
+        from benchmarks import locality
+        emit(locality.run(n_requests=10 if args.fast else 30))
+    if "batching" in only:
+        from benchmarks import batching
+        emit(batching.run(n_requests=16 if args.fast else 48))
+    if "pipelines" in only:
+        from benchmarks import pipelines
+        emit(pipelines.run(n=8 if args.fast else 16))
+    if "roofline" in only:
+        from benchmarks import roofline_table
+        emit(roofline_table.run())
+    print(f"# {len(rows)} rows in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Automated optimization selection (paper §7 'Future Work', implemented).
+
+The planner profiles the pipeline on a sample request (per-operator latency
+mean/CV + payload sizes) and chooses fusion / competitive execution /
+locality automatically — no manual optimization flags.
+
+  PYTHONPATH=src python examples/auto_optimize.py
+"""
+import random
+import time
+
+import numpy as np
+
+from repro.core.dataflow import Dataflow
+from repro.core.planner import auto_deploy
+from repro.core.table import Table
+from repro.runtime import NetModel, Runtime
+
+
+def main():
+    rng = random.Random(0)
+
+    def preproc(x: np.ndarray) -> np.ndarray:
+        return x * 2.0                       # cheap, big payload -> fuse
+
+    def jittery_model(x: np.ndarray) -> tuple[float, float]:
+        time.sleep(rng.choice([0.002, 0.002, 0.04]))   # heavy tail
+        return float(x.mean()), 0.9
+
+    def postproc(mean: float, conf: float) -> str:
+        return f"label-{int(mean * 10) % 5}"
+
+    fl = Dataflow([("x", np.ndarray)])
+    fl.output = (fl.map(preproc, names=["x"])
+                 .map(jittery_model, names=["mean", "conf"])
+                 .map(postproc, names=["label"]))
+
+    rt = Runtime(n_cpu=8, net=NetModel())
+    sample = Table([("x", np.ndarray)], [(np.ones(64 * 1024),)])
+
+    deployed, plan = auto_deploy(fl, rt, sample, runs=6)
+    print("planner decisions:")
+    for note in plan.notes:
+        print("  -", note)
+    print("  flags:", plan.flags)
+
+    lats = []
+    for i in range(10):
+        t0 = time.perf_counter()
+        out = deployed.execute(sample).result(timeout=30)
+        lats.append(time.perf_counter() - t0)
+    lats.sort()
+    print(f"result: {out.to_dicts()[0]}")
+    print(f"median {lats[len(lats)//2]*1e3:.1f} ms / "
+          f"p90 {lats[int(len(lats)*0.9)]*1e3:.1f} ms over 10 requests")
+    rt.stop()
+
+
+if __name__ == "__main__":
+    main()

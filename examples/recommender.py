@@ -1,0 +1,69 @@
+"""Recommender pipeline (paper §5.2, Facebook-style): request -> category
+from recent clicks -> KVS lookup of the (large) product-category matrix ->
+top-k scoring.  Demonstrates the locality optimization: with fusion +
+dynamic dispatch the scoring lands on the executor caching the category.
+
+  PYTHONPATH=src python examples/recommender.py
+"""
+import time
+
+import numpy as np
+
+from repro.core.dataflow import Dataflow
+from repro.core.table import Table
+from repro.runtime import NetModel, Runtime
+
+N_CATEGORIES = 8
+PRODUCTS = 4096
+DIM = 64
+
+
+def build_flow():
+    def categorize(user: int, clicks: int) -> tuple[int, str]:
+        return user, f"cat{clicks % N_CATEGORIES}"
+
+    def score(user: int, cat: str, lookup) -> tuple[int, float]:
+        uvec = np.random.default_rng(user).random(DIM)
+        scores = lookup @ uvec
+        top = int(np.argmax(scores))
+        return top, float(scores[top])
+
+    fl = Dataflow([("user", int), ("clicks", int)])
+    lk = fl.map(categorize, names=["user", "cat"]).lookup("cat", column=True)
+    fl.output = lk.map(score, names=["product", "score"])
+    return fl
+
+
+def run(optimized: bool):
+    rt = Runtime(n_cpu=4, net=NetModel(latency_s=0.5e-3, bandwidth=1e9))
+    try:
+        cat = np.random.default_rng(0).random((PRODUCTS, DIM))  # ~2MB each
+        for i in range(N_CATEGORIES):
+            rt.kvs.put(f"cat{i}", cat, charge=False)
+        fl = build_flow()
+        fl.deploy(rt, fusion=optimized, locality=optimized)
+        reqs = [Table([("user", int), ("clicks", int)], [(u, u * 7)])
+                for u in range(16)]
+        for t in reqs:   # warm caches
+            fl.execute(t).result(60)
+        lats = []
+        for t in reqs:
+            t0 = time.perf_counter()
+            out = fl.execute(t).result(60)
+            lats.append(time.perf_counter() - t0)
+        return sorted(lats)[len(lats) // 2], out.to_dicts()[0]
+    finally:
+        rt.stop()
+
+
+def main():
+    naive, sample = run(optimized=False)
+    opt, _ = run(optimized=True)
+    print(f"sample recommendation: {sample}")
+    print(f"median latency naive:            {naive*1e3:7.2f} ms")
+    print(f"median latency fusion+dispatch:  {opt*1e3:7.2f} ms")
+    print(f"locality speedup: {naive/opt:.2f}x (paper: ~2x vs Sagemaker)")
+
+
+if __name__ == "__main__":
+    main()

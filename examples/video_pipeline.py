@@ -1,0 +1,77 @@
+"""Real-time video analysis pipeline (paper §5.2 Video Streams).
+
+frames -> detector -> {people classifier, vehicle classifier} in parallel
+-> union -> groupby(label) -> count, with operator fusion.  The paper's
+headline result is meeting real-time latency on this pipeline.
+
+  PYTHONPATH=src python examples/video_pipeline.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_tiny_config
+from repro.core.dataflow import Dataflow
+from repro.core.table import Table
+from repro.models import build_model
+from repro.runtime import NetModel, Runtime
+
+
+def load(arch, seed):
+    cfg = get_tiny_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+
+    @jax.jit
+    def fwd(tokens):
+        logits, _ = model.logits(params, {"tokens": tokens}, remat=False)
+        return logits[:, -1]
+
+    fwd(jnp.ones((1, 16), jnp.int32)).block_until_ready()
+    return fwd
+
+
+def main():
+    yolo = load("llama-3.2-vision-11b", 0)   # detector stand-in (vlm arch!)
+    people = load("yi-9b", 1)
+    vehicles = load("glm4-9b", 2)
+
+    def detect(clip: np.ndarray) -> np.ndarray:
+        toks = (clip[:16] * 255).astype(np.int32) % 500
+        _ = np.asarray(yolo(jnp.asarray(toks)[None]))
+        return toks
+
+    def classify_people(toks: np.ndarray) -> tuple[str, float]:
+        o = np.asarray(people(jnp.asarray(toks)[None]))[0]
+        return f"person-{int(o.argmax()) % 3}", float(o.max())
+
+    def classify_vehicles(toks: np.ndarray) -> tuple[str, float]:
+        o = np.asarray(vehicles(jnp.asarray(toks)[None]))[0]
+        return f"vehicle-{int(o.argmax()) % 3}", float(o.max())
+
+    fl = Dataflow([("clip", np.ndarray)])
+    d = fl.map(detect, names=["toks"])
+    a = d.map(classify_people, names=["label", "conf"])
+    b = d.map(classify_vehicles, names=["label", "conf"])
+    fl.output = a.union(b).groupby("label").agg("count", "label")
+
+    rt = Runtime(n_cpu=4, net=NetModel())
+    fl.deploy(rt, fusion=True)
+    rng = np.random.default_rng(0)
+    lats = []
+    for i in range(6):
+        t0 = time.perf_counter()
+        out = fl.execute(Table([("clip", np.ndarray)],
+                               [(rng.random(30 * 64),)])).result(60)
+        lats.append(time.perf_counter() - t0)
+        print(f"clip {i}: {out.to_dicts()} ({lats[-1]*1e3:.1f} ms)")
+    med = sorted(lats)[len(lats) // 2]
+    print(f"median {med*1e3:.1f} ms -> "
+          f"{'REAL-TIME (<1s/clip)' if med < 1.0 else 'over budget'}")
+    rt.stop()
+
+
+if __name__ == "__main__":
+    main()

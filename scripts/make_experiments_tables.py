@@ -1,0 +1,105 @@
+"""Generate the §Dry-run and §Roofline markdown tables from results/dryrun.
+
+  PYTHONPATH=src python scripts/make_experiments_tables.py > results/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from repro.configs import ARCH_IDS, SHAPES
+from repro.configs.base import human
+
+
+def fmt_t(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def load(results_dir):
+    out = {}
+    for f in glob.glob(os.path.join(results_dir, "*.json")):
+        j = json.load(open(f))
+        out[(j["arch"], j["shape"], j["mesh"])] = j
+    return out
+
+
+def main():
+    results = load(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    shapes = list(SHAPES)
+
+    print("### Dry-run matrix (lower+compile status, peak bytes/chip)\n")
+    print("| arch | shape | 16x16 (256 chips) | 2x16x16 (512 chips) |")
+    print("|---|---|---|---|")
+    for arch in ARCH_IDS:
+        for shape in shapes:
+            cells = []
+            for mesh in ("16x16", "2x16x16"):
+                j = results.get((arch, shape, mesh))
+                if j is None:
+                    cells.append("—")
+                elif "skipped" in j:
+                    cells.append("skip (full-attn)")
+                elif "error" in j:
+                    cells.append("FAIL")
+                else:
+                    peak = j["memory"]["peak_est_bytes"] / 1e9
+                    fits = "fits" if peak <= 16 else "OVER"
+                    cells.append(f"ok, peak {peak:.1f} GB ({fits})")
+            print(f"| {arch} | {shape} | {cells[0]} | {cells[1]} |")
+
+    print("\n### Roofline (single-pod 16x16, per chip; analytic executed-"
+          "cost model + HLO-parsed collectives; multi-pod step bound for "
+          "comparison)\n")
+    print("| arch | shape | t_compute | t_memory | t_coll | bound | "
+          "MODEL_FLOPs/exec | step bound | 2-pod bound |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_IDS:
+        for shape in shapes:
+            j = results.get((arch, shape, "16x16"))
+            if not j or "roofline" not in j:
+                status = "skip" if j and "skipped" in j else "—"
+                print(f"| {arch} | {shape} | {status} | | | | | | |")
+                continue
+            r = j["roofline"]
+            bound = max(r["t_compute_s"], r["t_memory_s"],
+                        r["t_collective_s"])
+            j2 = results.get((arch, shape, "2x16x16"))
+            if j2 and "roofline" in j2:
+                r2 = j2["roofline"]
+                b2 = fmt_t(max(r2["t_compute_s"], r2["t_memory_s"],
+                               r2["t_collective_s"]))
+            else:
+                b2 = "—"
+            print(f"| {arch} | {shape} | {fmt_t(r['t_compute_s'])} | "
+                  f"{fmt_t(r['t_memory_s'])} | {fmt_t(r['t_collective_s'])} "
+                  f"| {r['bottleneck']} | {r['useful_ratio']:.2f} | "
+                  f"{fmt_t(bound)} | {b2} |")
+
+    print("\n### Collectives (single-pod, per chip per step, trip-count-"
+          "corrected)\n")
+    print("| arch | shape | all-gather | all-reduce | reduce-scatter | "
+          "all-to-all | permute |")
+    print("|---|---|---|---|---|---|---|")
+    for arch in ARCH_IDS:
+        for shape in shapes:
+            j = results.get((arch, shape, "16x16"))
+            if not j or "collectives" not in j:
+                continue
+            c = j["collectives"]
+            def gb(k):
+                v = c.get(k, 0) / 1e9
+                return f"{v:.2f}GB" if v >= 0.01 else (
+                    f"{c.get(k,0)/1e6:.1f}MB" if c.get(k, 0) else "0")
+            print(f"| {arch} | {shape} | {gb('all-gather')} | "
+                  f"{gb('all-reduce')} | {gb('reduce-scatter')} | "
+                  f"{gb('all-to-all')} | {gb('collective-permute')} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Config registry: one module per assigned architecture (+ shapes)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import (  # noqa: F401
+    SHAPES, LONG_CONTEXT_OK, InputShape,
+    TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+_MODULES = {
+    "arctic-480b": "repro.configs.arctic_480b",
+    "yi-9b": "repro.configs.yi_9b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "granite-34b": "repro.configs.granite_34b",
+    "gemma2-9b": "repro.configs.gemma2_9b",
+    "llama-3.2-vision-11b": "repro.configs.llama32_vision_11b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1b6",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    cfg = importlib.import_module(_MODULES[arch]).CONFIG
+    cfg.validate()
+    return cfg
+
+
+def get_tiny_config(arch: str) -> ModelConfig:
+    cfg = importlib.import_module(_MODULES[arch]).tiny()
+    cfg.validate()
+    return cfg
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,26 @@
+"""THUDM GLM-4-9B — dense GQA with RoPE, large vocab. [hf:THUDM/glm-4-9b]
+
+40L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=151552.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="glm4-9b",
+    family="dense",
+    source="hf:THUDM/glm-4-9b",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=13696,
+    vocab_size=151552,
+    rope_theta=10_000.0,
+)
+
+
+def tiny() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, name="glm4-tiny", num_layers=2, d_model=128, num_heads=4,
+        num_kv_heads=2, head_dim=32, d_ff=384, vocab_size=512)

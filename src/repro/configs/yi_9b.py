@@ -1,0 +1,26 @@
+"""01.AI Yi-9B — llama-architecture dense GQA. [arXiv:2403.04652]
+
+48L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-9b",
+    family="dense",
+    source="arXiv:2403.04652",
+    num_layers=48,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=64000,
+    rope_theta=10_000.0,
+)
+
+
+def tiny() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, name="yi-tiny", num_layers=2, d_model=128, num_heads=4,
+        num_kv_heads=2, head_dim=32, d_ff=384, vocab_size=512)

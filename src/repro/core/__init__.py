@@ -1,0 +1,2 @@
+from repro.core.dataflow import Dataflow  # noqa: F401
+from repro.core.table import Table, Row  # noqa: F401

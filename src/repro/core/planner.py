@@ -1,0 +1,158 @@
+"""Automated optimization selection (the paper's §7 "Future Work: Automated
+Optimization Selection", implemented as a simple cost-based planner).
+
+The paper requires the user to pick which optimizations to enable.  This
+planner instead *profiles* the flow on a sample input (per-operator latency
+mean/CV and output payload size) and decides:
+
+* **fusion** — fuse a chain edge when the modeled inter-function cost
+  (invocation overhead + payload transfer) is a significant fraction of the
+  downstream operator's own compute time; keep slow, compute-heavy
+  operators separate so the autoscaler retains per-operator granularity
+  (the paper's stated fusion<->autoscaling tradeoff, §4).
+* **competitive execution** — replicate operators whose latency
+  coefficient-of-variation exceeds a threshold (tail-dominated stages).
+* **locality / dynamic dispatch** — enabled whenever the flow contains
+  ``lookup`` operators with non-trivial payloads.
+
+``auto_deploy`` annotates the flow and deploys with the chosen flags.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.core import operators as ops
+from repro.core.dataflow import Dataflow, Node
+from repro.core.table import Table
+from repro.runtime.netmodel import NetModel, nbytes
+
+
+@dataclasses.dataclass
+class OpProfile:
+    mean_s: float
+    cv: float
+    out_bytes: int
+    runs: int
+
+
+@dataclasses.dataclass
+class Plan:
+    fusion: bool
+    competitive_exec: bool
+    locality: bool
+    replicas: Dict[int, int]            # node id -> competitive replicas
+    profiles: Dict[int, OpProfile]
+    notes: List[str]
+
+    @property
+    def flags(self) -> Dict[str, Any]:
+        return {"fusion": self.fusion,
+                "competitive_exec": self.competitive_exec,
+                "locality": self.locality}
+
+
+class _ProfileCtx:
+    """Execution context with a KVS for profiling lookups locally."""
+
+    def __init__(self, kvs=None):
+        self.kvs = kvs
+
+    def kvs_get(self, key):
+        return self.kvs.get(key, charge=False)
+
+
+def profile_flow(flow: Dataflow, sample: Table, *, runs: int = 3,
+                 kvs=None) -> Dict[int, OpProfile]:
+    """Run the flow ``runs`` times locally, timing every operator."""
+    flow.typecheck()
+    ctx = _ProfileCtx(kvs)
+    stats: Dict[int, List[float]] = {}
+    sizes: Dict[int, int] = {}
+    for _ in range(runs):
+        results: Dict[int, Table] = {}
+        for n in flow.sorted_nodes():
+            if n.op is None:
+                results[n.id] = sample
+                continue
+            ins = [results[u.id] for u in n.upstreams]
+            t0 = time.perf_counter()
+            out = n.op.apply(ins, ctx)
+            dt = time.perf_counter() - t0
+            stats.setdefault(n.id, []).append(dt)
+            sizes[n.id] = nbytes(out)
+            results[n.id] = out
+    profiles = {}
+    for nid, ts in stats.items():
+        mean = statistics.mean(ts)
+        cv = (statistics.stdev(ts) / mean) if (len(ts) > 1 and mean > 0) \
+            else 0.0
+        profiles[nid] = OpProfile(mean_s=mean, cv=cv,
+                                  out_bytes=sizes[nid], runs=len(ts))
+    return profiles
+
+
+def make_plan(flow: Dataflow, sample: Table, *, net: Optional[NetModel] = None,
+              runs: int = 3, kvs=None,
+              fuse_ratio: float = 0.25,       # hop cost / compute threshold
+              cv_threshold: float = 0.5,
+              replicas: int = 3) -> Plan:
+    net = net or NetModel()
+    profiles = profile_flow(flow, sample, runs=runs, kvs=kvs)
+    notes: List[str] = []
+
+    # -- fusion: is the average chain edge dominated by hop costs? ----------
+    edge_votes, edge_total = 0, 0
+    for n in flow.sorted_nodes():
+        if n.op is None or len(n.upstreams) != 1:
+            continue
+        up = n.upstreams[0]
+        if up.op is None:
+            continue
+        hop = net.invoke_overhead_s + net.transfer_time(
+            profiles[up.id].out_bytes)
+        compute = profiles[n.id].mean_s
+        edge_total += 1
+        if hop > fuse_ratio * max(compute, 1e-9):
+            edge_votes += 1
+    fusion = edge_total > 0 and edge_votes >= max(1, edge_total // 2)
+    notes.append(f"fusion: {edge_votes}/{edge_total} edges hop-dominated")
+
+    # -- competitive: flag tail-dominated operators --------------------------
+    rep: Dict[int, int] = {}
+    for n in flow.sorted_nodes():
+        if n.op is None:
+            continue
+        p = profiles[n.id]
+        if p.cv > cv_threshold and p.mean_s > 1e-3:
+            rep[n.id] = replicas
+            n.op.high_variance = True
+            n.op.competitive_replicas = replicas
+            notes.append(f"competitive x{replicas}: node {n.id} "
+                         f"({n.op.name}, cv={p.cv:.2f})")
+    competitive_exec = bool(rep)
+
+    # -- locality: lookups with real payloads --------------------------------
+    locality = False
+    for n in flow.sorted_nodes():
+        if n.op is None:
+            continue
+        is_lookup = isinstance(n.op, ops.Lookup)
+        if is_lookup and profiles[n.id].out_bytes > 64 * 1024:
+            locality = True
+            notes.append(f"locality: lookup node {n.id} moves "
+                         f"{profiles[n.id].out_bytes/1e6:.2f} MB")
+    return Plan(fusion=fusion, competitive_exec=competitive_exec,
+                locality=locality, replicas=rep, profiles=profiles,
+                notes=notes)
+
+
+def auto_deploy(flow: Dataflow, runtime, sample: Table, *, runs: int = 3,
+                **plan_kwargs):
+    """Profile, plan, and deploy in one call (paper §7 made concrete)."""
+    plan = make_plan(flow, sample, net=runtime.net, runs=runs,
+                     kvs=runtime.kvs, **plan_kwargs)
+    deployed = flow.deploy(runtime, **plan.flags)
+    return deployed, plan

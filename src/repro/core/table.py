@@ -1,0 +1,104 @@
+"""Cloudflow's core data structure: a small in-memory relational Table.
+
+A Table has a *schema* (list of (name, type) column descriptors), an optional
+*grouping column*, and rows.  Every row carries a hidden ``row_id`` assigned
+at dataflow execution time which persists through the pipeline (paper §3.1)
+and is the default join key.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+Schema = List[Tuple[str, type]]
+
+_counter = itertools.count()
+
+
+class Row:
+    __slots__ = ("values", "row_id", "group")
+
+    def __init__(self, values: Tuple[Any, ...], row_id: Optional[int] = None,
+                 group: Any = None):
+        self.values = tuple(values)
+        self.row_id = row_id if row_id is not None else next(_counter)
+        self.group = group
+
+    def replace(self, values: Tuple[Any, ...], group=...) -> "Row":
+        return Row(values, self.row_id,
+                   self.group if group is ... else group)
+
+    def __repr__(self):
+        return f"Row(id={self.row_id}, {self.values!r})"
+
+
+class Table:
+    def __init__(self, schema: Schema, rows: Optional[Iterable] = None,
+                 grouping: Optional[str] = None):
+        self.schema: Schema = [(str(n), t) for n, t in schema]
+        self.grouping = grouping
+        self.rows: List[Row] = []
+        if rows:
+            for r in rows:
+                self.insert(r)
+
+    # -- construction -------------------------------------------------------
+    def insert(self, values, group: Any = None) -> Row:
+        if isinstance(values, Row):
+            self.rows.append(values)
+            return values
+        if not isinstance(values, (tuple, list)):
+            values = (values,)
+        if len(values) != len(self.schema):
+            raise ValueError(
+                f"row arity {len(values)} != schema arity {len(self.schema)}")
+        row = Row(tuple(values), group=group)
+        self.rows.append(row)
+        return row
+
+    @property
+    def columns(self) -> List[str]:
+        return [n for n, _ in self.schema]
+
+    def column_index(self, name: str) -> int:
+        for i, (n, _) in enumerate(self.schema):
+            if n == name:
+                return i
+        raise KeyError(f"no column {name!r} in {self.columns}")
+
+    def column(self, name: str) -> List[Any]:
+        i = self.column_index(name)
+        return [r.values[i] for r in self.rows]
+
+    def with_rows(self, rows: List[Row], grouping=...) -> "Table":
+        t = Table(self.schema, grouping=self.grouping
+                  if grouping is ... else grouping)
+        t.rows = list(rows)
+        return t
+
+    # -- python sugar ---------------------------------------------------------
+    def __len__(self):
+        return len(self.rows)
+
+    def __iter__(self):
+        return iter(self.rows)
+
+    def __repr__(self):
+        g = f", grouped by {self.grouping!r}" if self.grouping else ""
+        return (f"Table({self.columns}{g}, {len(self.rows)} rows)\n" +
+                "\n".join(f"  {r}" for r in self.rows[:10]))
+
+    def to_dicts(self) -> List[Dict[str, Any]]:
+        return [dict(zip(self.columns, r.values)) for r in self.rows]
+
+    @staticmethod
+    def from_dicts(schema: Schema, dicts: Sequence[Dict[str, Any]]) -> "Table":
+        t = Table(schema)
+        for d in dicts:
+            t.insert(tuple(d[n] for n, _ in schema))
+        return t
+
+
+def schema_compatible(a: Schema, b: Schema) -> bool:
+    return len(a) == len(b) and all(ta == tb for (_, ta), (_, tb)
+                                    in zip(a, b))

@@ -1,0 +1,58 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in ``interpret=True`` mode — the
+kernel body executes in Python for correctness validation; on TPU the same
+``pl.pallas_call`` lowers to Mosaic.  ``interpret=None`` auto-detects.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.wkv6 import wkv6 as _wkv6
+from repro.kernels.rglru_scan import rglru_scan as _rglru
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "block_q", "block_k",
+    "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, scale=None, block_q: int = 128,
+                    block_k: int = 128, interpret: Optional[bool] = None):
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  scale=scale, block_q=block_q, block_k=block_k,
+                  interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "softcap", "scale", "block_s", "interpret"))
+def decode_attention(q, k_cache, v_cache, k_positions, q_position, *,
+                     window: int = 0, softcap: float = 0.0, scale=None,
+                     block_s: int = 512, interpret: Optional[bool] = None):
+    return _decode(q, k_cache, v_cache, k_positions, q_position,
+                   window=window, softcap=softcap, scale=scale,
+                   block_s=block_s, interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, *, chunk: int = 64,
+         interpret: Optional[bool] = None):
+    return _wkv6(r, k, v, w, u, chunk=chunk,
+                 interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_r", "interpret"))
+def rglru_scan(a, x, h0=None, *, chunk: int = 128, block_r: int = 512,
+               interpret: Optional[bool] = None):
+    return _rglru(a, x, h0, chunk=chunk, block_r=block_r,
+                  interpret=_auto_interpret(interpret))

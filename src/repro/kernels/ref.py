@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are deliberately naive (full score matrices, sequential scans) — the
+kernel tests sweep shapes/dtypes and assert_allclose against them.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0, scale: Optional[float] = None):
+    """q: [B, H, S, hd]; k, v: [B, K, S, hd] -> [B, H, S, hd] (naive)."""
+    B, H, S, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= (qp - kp) < window
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, k_positions, q_position, *,
+                         window: int = 0, softcap: float = 0.0,
+                         scale: Optional[float] = None):
+    """q: [B, H, hd]; caches [B, K, S, hd]; -> [B, H, hd]."""
+    B, H, hd = q.shape
+    K, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, K, G, hd)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    valid = (k_positions >= 0) & (k_positions <= q_position[:, None])
+    if window > 0:
+        valid &= (q_position[:, None] - k_positions) < window
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, w, u):
+    """Sequential WKV6.  r,k,v,w: [B,T,H,hd]; u: [H,hd] -> y [B,T,H,hd] f32."""
+    B, T, H, hd = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + uf[None, :, :, None] * kv)
+        return wt[..., None] * S + kv, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, wf))
+    _, ys = jax.lax.scan(step, jnp.zeros((B, H, hd, hd), jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def rglru_scan_ref(a, x, h0=None):
+    """Sequential diagonal recurrence.  a, x: [B,T,R] -> h traj [B,T,R] f32."""
+    B, T, R = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, R), jnp.float32)
+
+    def step(h, xs):
+        at, xt = xs
+        h = at.astype(jnp.float32) * h + xt.astype(jnp.float32)
+        return h, h
+
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(x, 1, 0))
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(hs, 0, 1)

@@ -1,0 +1,312 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# NOTE: the two lines above MUST be first — jax locks device count on init.
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination
+with ShapeDtypeStruct inputs (no allocation), print memory/cost analysis, and
+emit roofline terms as JSON (consumed by EXPERIMENTS.md and benchmarks).
+
+The XLA_FLAGS line above MUST run before any other import (jax locks device
+count on first init) and must live only here — tests/benches see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape decode_32k \
+      --multipod --out results/
+Options: --moe-dispatch {all_to_all,allgather}  --remat {nothing,dots}
+         --seq-shard {model,none}  (perf-iteration knobs)
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, SHAPES, LONG_CONTEXT_OK, ARCH_IDS
+from repro.configs.shapes import InputShape
+from repro.launch.mesh import make_production_mesh, make_axis_info
+from repro.launch import sharding as sh
+from repro.models.registry import build_model
+from repro.roofline import analysis, hw
+from repro.training import optim, train_step as ts_lib
+
+
+def should_skip(arch: str, shape_name: str) -> Optional[str]:
+    if shape_name == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return "full-attention arch: long_500k skipped (DESIGN.md §5)"
+    return None
+
+
+def _eval_state_specs(model, cfg, ax):
+    """Abstract train state + matching sharding specs (no allocation)."""
+    state_shape = jax.eval_shape(
+        lambda k: ts_lib.init_train_state(model, k), jax.random.PRNGKey(0))
+    specs = sh.state_pspecs(state_shape, cfg, ax)
+    return state_shape, specs
+
+
+def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
+                 moe_dispatch: str = "all_to_all",
+                 remat: Optional[str] = None,
+                 kv_quant: bool = False, expert_quant: bool = False,
+                 bf16_boundary: bool = False,
+                 grad_accum: Optional[int] = None, seq_shard: bool = True,
+                 rs_outputs: bool = False, causal_skip: bool = False,
+                 serve_mode: str = "tp") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if remat:
+        cfg = dataclasses.replace(cfg, remat_policy=remat)
+    if kv_quant:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    if expert_quant:
+        cfg = dataclasses.replace(cfg, expert_quant=True)
+    if bf16_boundary:
+        cfg = dataclasses.replace(cfg, bf16_boundary=True)
+    if grad_accum is not None:
+        cfg = dataclasses.replace(cfg, grad_accum=grad_accum)
+    if not seq_shard:
+        cfg = dataclasses.replace(cfg, seq_shard=False)
+    if rs_outputs:
+        cfg = dataclasses.replace(cfg, rs_outputs=True)
+    if causal_skip:
+        cfg = dataclasses.replace(cfg, causal_skip=True)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    long_context = shape_name == "long_500k"
+    shard_batch = shape.global_batch % (
+        mesh.size // mesh.shape["model"]) == 0
+    ax = make_axis_info(mesh, shard_batch=shard_batch)
+    model = build_model(cfg, ax, long_context=long_context,
+                        moe_dispatch=moe_dispatch)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            state_shape, state_specs = _eval_state_specs(model, cfg, ax)
+            batch_specs = sh.batch_pspecs(cfg, ax, shape)
+            step = ts_lib.make_train_step(model)
+            jitted = jax.jit(
+                step,
+                in_shardings=(sh.to_shardings(mesh, state_specs),
+                              sh.to_shardings(mesh, batch_specs)),
+                out_shardings=(sh.to_shardings(mesh, state_specs), None),
+                donate_argnums=(0,),
+            )
+            specs = model.input_specs(shape)
+            state_abs = jax.tree.map(
+                lambda s, sp: jax.ShapeDtypeStruct(
+                    s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+                state_shape, state_specs,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            lowered = jitted.lower(state_abs, specs)
+        elif shape.kind == "prefill":
+            pspecs = sh.param_pspecs(
+                jax.eval_shape(model.init, jax.random.PRNGKey(0)), cfg, ax,
+                mode="serve" if cfg.num_experts == 0 else "train")
+            batch_specs = sh.batch_pspecs(cfg, ax, shape)
+            cache_specs = model.cache_pspecs()
+
+            def prefill_fn(params, batch):
+                return model.prefill(params, batch, cache_len=shape.seq_len)
+
+            jitted = jax.jit(
+                prefill_fn,
+                in_shardings=(sh.to_shardings(mesh, pspecs),
+                              sh.to_shardings(mesh, batch_specs)),
+                out_shardings=(None, sh.to_shardings(mesh, cache_specs)))
+            params_abs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            lowered = jitted.lower(params_abs, model.input_specs(shape))
+        else:  # decode
+            pspecs = sh.param_pspecs(
+                jax.eval_shape(model.init, jax.random.PRNGKey(0)), cfg, ax,
+                mode="serve" if cfg.num_experts == 0 else "train")
+            cache_specs = model.cache_pspecs()
+            b = ax.batch
+
+            def decode_fn(params, tokens, pos, cache):
+                return model.decode_step(params, tokens, pos, cache)
+
+            jitted = jax.jit(
+                decode_fn,
+                in_shardings=(sh.to_shardings(mesh, pspecs),
+                              NamedSharding(mesh, P(b, None)),
+                              NamedSharding(mesh, P(b)),
+                              sh.to_shardings(mesh, cache_specs)),
+                out_shardings=(None, sh.to_shardings(mesh, cache_specs)),
+                donate_argnums=(3,))
+            specs = model.input_specs(shape)
+            params_abs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            lowered = jitted.lower(params_abs, specs["tokens"], specs["pos"],
+                                   specs["cache"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # tokens processed per step (for per-token metrics)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    n_active = cfg.active_param_count()
+    mult = 6 if shape.kind == "train" else 2
+    model_flops = float(mult * n_active * tokens)
+    roof = analysis.from_compiled(compiled, model_flops=model_flops,
+                                  chips=chips)
+    # analytic executed-cost model (primary; HLO cost_analysis counts scan
+    # bodies once — see repro.roofline.flops docstring)
+    from repro.roofline import flops as flops_lib
+    est = flops_lib.estimate(cfg, shape, chips=chips, mp=mesh.shape["model"],
+                             long_context=long_context,
+                             moe_dispatch=moe_dispatch)
+    coll_corr = analysis.collective_bytes_corrected(compiled.as_text())
+    coll_total = sum(v for k, v in coll_corr.items() if k != "count")
+    roof_analytic = analysis.Roofline(
+        flops=est.step_flops / chips,
+        hbm_bytes=est.hbm_bytes_per_chip,
+        coll_bytes=coll_total,
+        model_flops=est.model_flops, chips=chips)
+    mem = compiled.memory_analysis()
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": shape.kind,
+        "moe_dispatch": moe_dispatch,
+        "remat": cfg.remat_policy,
+        "kv_quant": cfg.kv_quant,
+        "bf16_boundary": cfg.bf16_boundary,
+        "grad_accum": cfg.grad_accum,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "tokens_per_step": tokens,
+        "params": cfg.param_count(), "active_params": n_active,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_est_bytes": mem.argument_size_in_bytes
+            - mem.alias_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes,
+            "hbm_per_chip": hw.HBM_BYTES,
+        },
+        "collectives_raw": analysis.collective_bytes(compiled.as_text()),
+        "collectives": coll_corr,
+        "roofline_hlo": roof.to_dict(),
+        "roofline": roof_analytic.to_dict(),
+        "analytic": est.to_dict(),
+    }
+    return result
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None, choices=list(ARCH_IDS))
+    p.add_argument("--shape", default=None, choices=list(SHAPES))
+    p.add_argument("--batch-archs", default=None,
+                   help="comma-list or 'all': run arch x shape x mesh matrix")
+    p.add_argument("--batch-shapes", default="all")
+    p.add_argument("--meshes", default="both",
+                   choices=["single", "multi", "both"])
+    p.add_argument("--multipod", action="store_true")
+    p.add_argument("--moe-dispatch", default="all_to_all",
+                   choices=["all_to_all", "allgather"])
+    p.add_argument("--remat", default=None, choices=["nothing", "dots",
+                                                     "everything"])
+    p.add_argument("--kv-quant", action="store_true")
+    p.add_argument("--expert-quant", action="store_true")
+    p.add_argument("--barrier", action="store_true", dest="bf16_boundary")
+    p.add_argument("--grad-accum", type=int, default=None)
+    p.add_argument("--no-seq-shard", action="store_false", dest="seq_shard")
+    p.add_argument("--rs-outputs", action="store_true")
+    p.add_argument("--causal-skip", action="store_true")
+    p.add_argument("--tag", default=None, help="suffix for the output JSON")
+    p.add_argument("--out", default=None, help="directory for the JSON")
+    args = p.parse_args(argv)
+
+    if args.batch_archs:
+        archs = (list(ARCH_IDS) if args.batch_archs == "all"
+                 else args.batch_archs.split(","))
+        shapes = (list(SHAPES) if args.batch_shapes == "all"
+                  else args.batch_shapes.split(","))
+        meshes = {"single": [False], "multi": [True],
+                  "both": [False, True]}[args.meshes]
+        run_batch(archs, shapes, meshes, args.out or "results/dryrun",
+                  moe_dispatch=args.moe_dispatch)
+        return 0
+
+    skip = should_skip(args.arch, args.shape)
+    if skip:
+        result = {"arch": args.arch, "shape": args.shape,
+                  "mesh": "2x16x16" if args.multipod else "16x16",
+                  "skipped": skip}
+    else:
+        result = build_dryrun(args.arch, args.shape, multi_pod=args.multipod,
+                              moe_dispatch=args.moe_dispatch,
+                              remat=args.remat, kv_quant=args.kv_quant,
+                              expert_quant=args.expert_quant,
+                              bf16_boundary=args.bf16_boundary,
+                              grad_accum=args.grad_accum,
+                              seq_shard=args.seq_shard,
+                              rs_outputs=args.rs_outputs,
+                              causal_skip=args.causal_skip)
+    print(json.dumps(result, indent=2))
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        tag = f"{args.arch}__{args.shape}__{result['mesh']}"
+        if args.moe_dispatch != "all_to_all":
+            tag += f"__{args.moe_dispatch}"
+        if args.remat:
+            tag += f"__remat-{args.remat}"
+        if args.tag:
+            tag += f"__{args.tag}"
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=2)
+    return 0
+
+
+def run_batch(archs, shapes, meshes, out_dir: str, *,
+              moe_dispatch: str = "all_to_all", skip_existing: bool = True):
+    """Run many combos in one process (amortizes jax import/trace cost).
+    One JSON per combo; failures recorded, not fatal."""
+    os.makedirs(out_dir, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for multi_pod in meshes:
+                mesh_tag = "2x16x16" if multi_pod else "16x16"
+                tag = f"{arch}__{shape}__{mesh_tag}"
+                path = os.path.join(out_dir, tag + ".json")
+                if skip_existing and os.path.exists(path):
+                    print("skip (exists):", tag, flush=True)
+                    continue
+                skip = should_skip(arch, shape)
+                if skip:
+                    result = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+                              "skipped": skip}
+                else:
+                    t0 = time.time()
+                    try:
+                        result = build_dryrun(arch, shape,
+                                              multi_pod=multi_pod,
+                                              moe_dispatch=moe_dispatch)
+                    except Exception as e:
+                        import traceback
+                        result = {"arch": arch, "shape": shape,
+                                  "mesh": mesh_tag, "error": str(e)[:2000],
+                                  "traceback":
+                                  traceback.format_exc()[-4000:]}
+                    result["wall_s"] = round(time.time() - t0, 1)
+                with open(path, "w") as f:
+                    json.dump(result, f, indent=2)
+                status = ("SKIP" if "skipped" in result else
+                          "FAIL" if "error" in result else "ok  ")
+                print(f"{status} {tag} ({result.get('wall_s', 0)}s)",
+                      flush=True)
+                jax.clear_caches()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

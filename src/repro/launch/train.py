@@ -1,0 +1,77 @@
+"""Training launcher.
+
+On real hardware this runs under the production mesh; on this container it
+runs tiny configs on one CPU device (the e2e example) or, with --dryrun,
+defers to repro.launch.dryrun.
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-9b --tiny --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_tiny_config, ARCH_IDS
+from repro.models.registry import build_model
+from repro.training import checkpoint, optim
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def run(arch: str, *, tiny: bool = True, steps: int = 50, batch_size: int = 8,
+        seq_len: int = 64, lr: float = 1e-3, ckpt_dir: str = "",
+        log_every: int = 10, seed: int = 0):
+    cfg = get_tiny_config(arch) if tiny else get_config(arch)
+    model = build_model(cfg)
+    opt_cfg = optim.OptConfig(name=cfg.optimizer, lr=lr, warmup_steps=20)
+    state = init_train_state(model, jax.random.PRNGKey(seed), opt_cfg)
+    step_fn = jax.jit(make_train_step(model, opt_cfg), donate_argnums=(0,))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                                  batch_size=batch_size, seed=seed))
+    extras = {}
+    if cfg.family == "vlm":
+        extras["media"] = jnp.zeros((batch_size, cfg.num_media_tokens,
+                                     cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.family == "audio":
+        extras["frames"] = jnp.zeros((batch_size, cfg.encoder_seq,
+                                      cfg.d_model), jnp.dtype(cfg.dtype))
+    losses = []
+    t0 = time.time()
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch().items()}
+        batch.update(extras)
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            print(f"step {i:4d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+    if ckpt_dir:
+        path = checkpoint.save(ckpt_dir, state, steps)
+        print("saved", path)
+    return losses, state
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True, choices=list(ARCH_IDS))
+    p.add_argument("--tiny", action="store_true", default=True)
+    p.add_argument("--full", dest="tiny", action="store_false")
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--batch-size", type=int, default=8)
+    p.add_argument("--seq-len", type=int, default=64)
+    p.add_argument("--lr", type=float, default=1e-3)
+    p.add_argument("--ckpt-dir", default="")
+    args = p.parse_args()
+    losses, _ = run(args.arch, tiny=args.tiny, steps=args.steps,
+                    batch_size=args.batch_size, seq_len=args.seq_len,
+                    lr=args.lr, ckpt_dir=args.ckpt_dir)
+    print(f"first loss {losses[0]:.4f} -> last loss {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models.registry import Model, build_model, cross_entropy  # noqa: F401
+from repro.models.partition import AxisInfo  # noqa: F401

@@ -1,0 +1,349 @@
+"""Shared neural-net layers for the model zoo (pure-jnp, functional).
+
+Everything here is mesh-agnostic; sharding constraints are applied by the
+model wrappers via ``repro.models.partition``.  Attention is implemented in a
+KV-chunked online-softmax form (``chunked_attention``) so 32k-token prefill
+lowers without materializing O(S^2) score tensors; the Pallas flash kernel in
+``repro.kernels`` is a drop-in replacement validated against this code.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dtype)
+
+
+def apply_norm(x, params, kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    return layernorm(x, params["scale"], params["bias"])
+
+
+def init_norm(key, d: int, kind: str, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def groupnorm_heads(x, scale, bias, num_heads: int, eps: float = 64e-5):
+    """GroupNorm over per-head channels (RWKV6 time-mix output norm)."""
+    b, t, d = x.shape
+    xs = x.astype(jnp.float32).reshape(b, t, num_heads, d // num_heads)
+    mu = jnp.mean(xs, axis=-1, keepdims=True)
+    var = jnp.var(xs, axis=-1, keepdims=True)
+    xs = (xs - mu) * jax.lax.rsqrt(var + eps)
+    xs = xs.reshape(b, t, d)
+    return (xs * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # [hd/2]
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, n_heads, head_dim]; positions: [S] or [B, S] int32."""
+    if theta <= 0.0:
+        return x
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)
+    angles = positions.astype(jnp.float32)[..., None] * freqs   # [(B,)S,hd/2]
+    # broadcast over the heads axis
+    angles = jnp.expand_dims(angles, axis=-2)                   # [(B,)S,1,hd/2]
+    if angles.ndim == x.ndim - 1:                               # positions [S]
+        angles = jnp.broadcast_to(angles, x.shape[:-1] + (hd // 2,))
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (chunked online-softmax; GQA; sliding window; logit softcap)
+# ---------------------------------------------------------------------------
+NEG_INF = -1e30
+
+
+def _softcap(logits, cap: float):
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def _mask_logits(logits, q_pos, k_pos, *, causal: bool, window: int):
+    """logits: [..., Q, Kc]; q_pos: [..., Q]; k_pos: [..., Kc] (−1 = invalid)."""
+    valid = (k_pos >= 0)[..., None, :]
+    if causal:
+        valid = valid & (k_pos[..., None, :] <= q_pos[..., :, None])
+    if window and window > 0:
+        valid = valid & (q_pos[..., :, None] - k_pos[..., None, :] < window)
+    return jnp.where(valid, logits, NEG_INF)
+
+
+def chunked_attention(q, k, v, *, q_positions, k_positions,
+                      causal: bool = True, window: int = 0,
+                      softcap: float = 0.0, chunk_q: int = 1024,
+                      chunk_k: int = 1024, scale: Optional[float] = None):
+    """Flash-style attention without O(Sq*Sk) live memory.
+
+    q: [B, Sq, H, hd];  k, v: [B, Sk, K, hd] with H = K*G (GQA).
+    q_positions: [Sq] or [B, Sq]; k_positions: [Sk] or [B, Sk] (−1 invalid).
+    Returns [B, Sq, H, hd].
+    """
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    cq = min(chunk_q, Sq)
+    ck = min(chunk_k, Sk)
+    assert Sq % cq == 0 and Sk % ck == 0, (Sq, cq, Sk, ck)
+    nq, nk = Sq // cq, Sk // ck
+
+    if q_positions.ndim == 1:
+        q_positions = jnp.broadcast_to(q_positions[None], (B, Sq))
+    if k_positions.ndim == 1:
+        k_positions = jnp.broadcast_to(k_positions[None], (B, Sk))
+
+    qc = q.reshape(B, nq, cq, K, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    qp = q_positions.reshape(B, nq, cq).transpose(1, 0, 2)       # [nq,B,cq]
+    kc = k.reshape(B, nk, ck, K, hd).transpose(1, 0, 3, 2, 4)    # [nk,B,K,ck,hd]
+    vc = v.reshape(B, nk, ck, K, hd).transpose(1, 0, 3, 2, 4)
+    kp = k_positions.reshape(B, nk, ck).transpose(1, 0, 2)       # [nk,B,ck]
+
+    def q_step(_, qx):
+        q_blk, qpos = qx                       # [B,K,G,cq,hd], [B,cq]
+        m0 = jnp.full((B, K, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, K, G, cq, hd), jnp.float32)
+
+        # flash-style backward: recompute per-chunk probabilities instead of
+        # letting AD save the O(S^2) score chunks across both scans
+        @jax.checkpoint
+        def k_step(carry, kx):
+            m, l, acc = carry
+            k_blk, v_blk, kpos = kx            # [B,K,ck,hd] x2, [B,ck]
+            logits = jnp.einsum("bkgqd,bkcd->bkgqc",
+                                q_blk.astype(jnp.float32),
+                                k_blk.astype(jnp.float32)) * scale
+            logits = _softcap(logits, softcap)
+            logits = _mask_logits(
+                logits, qpos[:, None, None, :], kpos[:, None, None, :],
+                causal=causal, window=window)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(k_step, (m0, l0, a0), (kc, vc, kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)       # [B,K,G,cq,hd]
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_step), None, (qc, qp))
+    # outs: [nq, B, K, G, cq, hd] -> [B, Sq, H, hd]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, hd)
+    return out
+
+
+def chunked_attention_causal_skip(q, k, v, *, q_positions, k_positions,
+                                  softcap: float = 0.0, chunk: int = 1024,
+                                  scale: Optional[float] = None):
+    """Causal chunked attention that only computes the lower-triangle chunk
+    pairs (nq*(nq+1)/2 instead of nq*nk) — §Perf prefill lever.
+
+    Equivalent to ``chunked_attention(causal=True, window=0)``; one scan over
+    the static (qi, ki<=qi) pair list with running-softmax state carried per
+    q-chunk.  Executed attention FLOPs halve at long S.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    assert Sq == Sk, "causal-skip path expects self-attention"
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    c = min(chunk, Sq)
+    assert Sq % c == 0
+    n = Sq // c
+    if q_positions.ndim == 1:
+        q_positions = jnp.broadcast_to(q_positions[None], (B, Sq))
+    k_positions = q_positions if k_positions is None else (
+        jnp.broadcast_to(k_positions[None], (B, Sk))
+        if k_positions.ndim == 1 else k_positions)
+
+    qc = q.reshape(B, n, c, K, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    kc = k.reshape(B, n, c, K, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, n, c, K, hd).transpose(1, 0, 3, 2, 4)
+    qp = q_positions.reshape(B, n, c).transpose(1, 0, 2)
+    kp = k_positions.reshape(B, n, c).transpose(1, 0, 2)
+
+    QI = jnp.asarray([qi for qi in range(n) for _ in range(qi + 1)],
+                     jnp.int32)
+    KI = jnp.asarray([ki for qi in range(n) for ki in range(qi + 1)],
+                     jnp.int32)
+
+    m0 = jnp.full((n, B, K, G, c), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((n, B, K, G, c), jnp.float32)
+    a0 = jnp.zeros((n, B, K, G, c, hd), jnp.float32)
+
+    def step(carry, idx):
+        m, l, acc = carry
+        qi, ki = idx
+        q_blk = jax.lax.dynamic_index_in_dim(qc, qi, 0, keepdims=False)
+        qpos = jax.lax.dynamic_index_in_dim(qp, qi, 0, keepdims=False)
+        k_blk = jax.lax.dynamic_index_in_dim(kc, ki, 0, keepdims=False)
+        v_blk = jax.lax.dynamic_index_in_dim(vc, ki, 0, keepdims=False)
+        kpos = jax.lax.dynamic_index_in_dim(kp, ki, 0, keepdims=False)
+        logits = jnp.einsum("bkgqd,bkcd->bkgqc",
+                            q_blk.astype(jnp.float32),
+                            k_blk.astype(jnp.float32)) * scale
+        logits = _softcap(logits, softcap)
+        logits = _mask_logits(
+            logits, qpos[:, None, None, :], kpos[:, None, None, :],
+            causal=True, window=0)
+        mq = jax.lax.dynamic_index_in_dim(m, qi, 0, keepdims=False)
+        lq = jax.lax.dynamic_index_in_dim(l, qi, 0, keepdims=False)
+        aq = jax.lax.dynamic_index_in_dim(acc, qi, 0, keepdims=False)
+        m_new = jnp.maximum(mq, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(mq - m_new)
+        lq = lq * corr + jnp.sum(p, axis=-1)
+        aq = aq * corr[..., None] + jnp.einsum(
+            "bkgqc,bkcd->bkgqd", p, v_blk.astype(jnp.float32))
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, lq, qi, 0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, aq, qi, 0)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (QI, KI))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, hd).astype(
+        q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, q_position, k_positions,
+                     window: int = 0, softcap: float = 0.0,
+                     scale: Optional[float] = None):
+    """Single-token attention against a (possibly ring-buffer) KV cache.
+
+    q: [B, 1, H, hd]; k_cache/v_cache: [B, S, K, hd];
+    q_position: [B] int32; k_positions: [B, S] int32 (−1 = empty slot).
+    """
+    B, _, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qh = q.reshape(B, K, G, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qh.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    logits = _softcap(logits, softcap)
+    valid = (k_positions >= 0) & (k_positions <= q_position[:, None])
+    if window and window > 0:
+        valid = valid & (q_position[:, None] - k_positions < window)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache quantization (beyond-paper serving optimization, §Perf C)
+# ---------------------------------------------------------------------------
+def kv_quantize(x):
+    """x: [..., hd] -> (int8 values, f32 scale [...]). Per-(slot, head)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def kv_dequantize(q, scale, dtype=jnp.bfloat16):
+    """On TPU this fuses into the attention matmul inside the Pallas decode
+    kernel; the pure-jnp path materializes (HBM traffic is still counted as
+    int8 in the analytic roofline — the kernel is the deployment path)."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def _act(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    return jax.nn.gelu(x, approximate=True)
+
+
+def mlp_apply(x, params, *, gated: bool, act: str):
+    if gated:
+        h = _act(x @ params["w_gate"], act) * (x @ params["w_up"])
+    else:
+        h = _act(x @ params["w_up"], act)
+    return h @ params["w_down"]
+
+
+def mlp_init(key, d: int, f: int, *, gated: bool, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_up": _dense_init(k1, d, f, dtype),
+         "w_down": _dense_init(k2, f, d, dtype)}
+    if gated:
+        p["w_gate"] = _dense_init(k3, d, f, dtype)
+    return p
+
+
+def _dense_init(key, fan_in: int, fan_out: int, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.normal(key, (fan_in, fan_out), jnp.float32)
+            * std).astype(dtype)
+
+
+def dense_init(key, shape: Tuple[int, ...], dtype, fan_in: Optional[int] = None):
+    fan_in = fan_in if fan_in is not None else shape[-2] if len(shape) > 1 else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32)
+            * (1.0 / math.sqrt(d))).astype(dtype)
+
+
+def embed_lookup(table, tokens, *, scale_by_dim: bool = False):
+    out = jnp.take(table, tokens, axis=0)
+    if scale_by_dim:
+        out = out * math.sqrt(table.shape[-1])
+    return out
+
+
+def unembed(x, table, *, softcap: float = 0.0):
+    logits = jnp.einsum("...d,vd->...v", x, table).astype(jnp.float32)
+    return _softcap(logits, softcap)

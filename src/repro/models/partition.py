@@ -1,0 +1,73 @@
+"""Mesh axis bookkeeping shared by models and the launcher.
+
+``AxisInfo`` describes the logical axes of the active mesh.  Model code calls
+``ax.shard(x, ...)`` to attach sharding constraints; with ``ax=None`` (smoke
+tests, single device) everything is a no-op, so the model zoo runs unchanged
+on one CPU device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisInfo:
+    """Logical axes: ``data`` (batch/FSDP; may be ('pod','data')), ``model``.
+
+    ``shard_batch=False`` (long_500k: global batch 1) keeps weight sharding
+    but leaves activation batch dims replicated.
+    """
+    mesh: Mesh
+    data: Tuple[str, ...] = ("data",)
+    model: str = "model"
+    shard_batch: bool = True
+
+    @property
+    def batch(self) -> Optional[Tuple[str, ...]]:
+        """Axes for activation batch dims (None when batch is unshardable)."""
+        return self.data if self.shard_batch else None
+
+    @property
+    def dp_size(self) -> int:
+        return math.prod(self.mesh.shape[a] for a in self.data)
+
+    @property
+    def mp_size(self) -> int:
+        return self.mesh.shape[self.model]
+
+    def spec(self, *axes: AxisName) -> P:
+        return P(*axes)
+
+    def shard(self, x, *axes: AxisName):
+        """with_sharding_constraint under the active mesh."""
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*axes)))
+
+    def sharding(self, *axes: AxisName) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*axes))
+
+
+def shard(ax: Optional[AxisInfo], x, *axes: AxisName):
+    if ax is None:
+        return x
+    return ax.shard(x, *axes)
+
+
+def mp_size(ax: Optional[AxisInfo]) -> int:
+    return 1 if ax is None else ax.mp_size
+
+
+def dp_axes(ax: Optional[AxisInfo]):
+    """Batch-dim axes for activations (None if batch unshardable/no mesh)."""
+    return None if ax is None else ax.batch
+
+
+def mp_axis(ax: Optional[AxisInfo]) -> Optional[str]:
+    return None if ax is None else ax.model

@@ -1,0 +1,160 @@
+"""Uniform model facade over the zoo families.
+
+``build_model(cfg, ax)`` returns a ``Model`` with:
+
+* ``init(key)``                          -> params pytree
+* ``logits(params, batch)``              -> [B, S, V] (train forward)
+* ``loss(params, batch)``                -> (scalar, metrics)
+* ``prefill(params, batch, cache_len)``  -> (logits, cache)
+* ``decode_step(params, tokens, pos, cache, media?)`` -> (logits, cache)
+* ``init_cache(batch, cache_len)``
+* ``input_specs(shape)``                 -> ShapeDtypeStructs for the dry-run
+
+``batch`` is a dict: {"tokens", "labels"?, "media"? (vlm stub patch
+embeddings), "frames"? (audio stub frame embeddings)}.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models import transformer, rwkv6, rglru, whisper
+from repro.models.partition import AxisInfo, shard, dp_axes, mp_axis
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": rwkv6,
+    "hybrid": rglru,
+    "audio": whisper,
+}
+
+
+def cross_entropy(logits, labels, *, ignore_id: int = -1):
+    """logits: [B, S, V] (f32); labels: [B, S] int32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    mask = (labels != ignore_id).astype(jnp.float32)
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    ax: Optional[AxisInfo] = None
+    long_context: bool = False
+    moe_dispatch: str = "all_to_all"
+
+    @property
+    def mod(self):
+        return _FAMILY_MODULES[self.cfg.family]
+
+    # -- params ------------------------------------------------------------
+    def init(self, key):
+        return self.mod.init_params(key, self.cfg, self.ax,
+                                    long_context=self.long_context)
+
+    # -- forward / loss ------------------------------------------------------
+    def _fwd_kwargs(self, batch, remat):
+        kw: Dict[str, Any] = {"remat": remat}
+        if self.cfg.family in ("vlm", "moe"):
+            kw["moe_dispatch"] = self.moe_dispatch
+        if self.cfg.family == "vlm":
+            kw["media"] = batch.get("media")
+        if self.cfg.family == "audio":
+            kw["frames"] = batch.get("frames")
+        if self.cfg.family in ("dense", "moe", "vlm"):
+            kw["long_context"] = self.long_context
+        return kw
+
+    def logits(self, params, batch, *, remat: bool = True):
+        out, aux = self.mod.forward(params, batch["tokens"], self.cfg,
+                                    self.ax, **self._fwd_kwargs(batch, remat))
+        return out, aux
+
+    def loss(self, params, batch, *, remat: bool = True):
+        logits, aux = self.logits(params, batch, remat=remat)
+        labels = batch.get("labels")
+        if labels is None:
+            labels = jnp.concatenate(
+                [batch["tokens"][:, 1:],
+                 jnp.full_like(batch["tokens"][:, :1], -1)], axis=1)
+        ce = cross_entropy(logits, labels)
+        total = ce + self.cfg.router_aux_loss_coef * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # -- serving -------------------------------------------------------------
+    def prefill(self, params, batch, cache_len: int):
+        out = self.mod.forward(params, batch["tokens"], self.cfg, self.ax,
+                               build_cache=True, cache_len=cache_len,
+                               **self._fwd_kwargs(batch, remat=False))
+        logits, cache, _aux = out
+        return logits[:, -1:], cache
+
+    def init_cache(self, batch: int, cache_len: int):
+        return self.mod.init_cache(
+            self.cfg, self.ax, batch, cache_len,
+            long_context=self.long_context)
+
+    def cache_pspecs(self):
+        return self.mod.cache_pspecs(self.cfg, self.ax,
+                                     long_context=self.long_context)
+
+    def decode_step(self, params, tokens, pos, cache):
+        kw = {}
+        if self.cfg.family in ("moe",):
+            kw["moe_dispatch"] = self.moe_dispatch
+        if self.cfg.family in ("dense", "moe", "vlm"):
+            kw["long_context"] = self.long_context
+        return self.mod.decode_step(params, tokens, pos, cache, self.cfg,
+                                    self.ax, **kw)
+
+    # -- dry-run specs ---------------------------------------------------------
+    def input_specs(self, shape: InputShape) -> Dict[str, Any]:
+        """ShapeDtypeStructs for every model input of the given shape."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        dt = jnp.dtype(cfg.dtype)
+        if shape.kind == "train":
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                     "labels": jax.ShapeDtypeStruct((B, S), i32)}
+            if cfg.family == "vlm":
+                specs["media"] = jax.ShapeDtypeStruct(
+                    (B, cfg.num_media_tokens, cfg.d_model), dt)
+            if cfg.family == "audio":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_seq, cfg.d_model), dt)
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+            if cfg.family == "vlm":
+                specs["media"] = jax.ShapeDtypeStruct(
+                    (B, cfg.num_media_tokens, cfg.d_model), dt)
+            if cfg.family == "audio":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_seq, cfg.d_model), dt)
+            return specs
+        # decode: one token + cache of length S
+        cache = jax.eval_shape(lambda: self.init_cache(B, S))
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                "pos": jax.ShapeDtypeStruct((B,), i32),
+                "cache": cache}
+
+
+def build_model(cfg: ModelConfig, ax: Optional[AxisInfo] = None, *,
+                long_context: bool = False,
+                moe_dispatch: str = "all_to_all") -> Model:
+    if cfg.family not in _FAMILY_MODULES:
+        raise ValueError(f"unknown family {cfg.family}")
+    return Model(cfg=cfg, ax=ax, long_context=long_context,
+                 moe_dispatch=moe_dispatch)

@@ -1,0 +1,381 @@
+"""RecurrentGemma / Griffin — RG-LRU recurrent blocks + local attention (2:1).
+[arXiv:2402.19427]
+
+Layer pattern: (recurrent, recurrent, local-attn) repeated; each layer is a
+temporal block followed by a gated MLP.  The stack is scanned over
+(rec, rec, attn) super-blocks with the remainder layers unrolled (26 = 8*3+2).
+Training uses ``jax.lax.associative_scan`` for the linear recurrence
+(log-depth on TPU); decode keeps a [B, R] hidden state + conv ring.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.partition import AxisInfo, shard, mp_size, dp_axes, mp_axis
+
+C_SCALE = 8.0  # Griffin's fixed recurrence sharpness
+
+
+def layer_types(cfg: ModelConfig) -> List[str]:
+    p = cfg.attn_layer_period
+    return ["attn" if (i % p) == p - 1 else "rec"
+            for i in range(cfg.num_layers)]
+
+
+def layout(cfg: ModelConfig) -> Tuple[List[str], int, List[str]]:
+    """(block pattern, n_blocks, remainder types)."""
+    types = layer_types(cfg)
+    p = cfg.attn_layer_period
+    n_blocks = cfg.num_layers // p
+    return types[:p], n_blocks, types[n_blocks * p:]
+
+
+# ---------------------------------------------------------------------------
+def _rec_init(key, cfg: ModelConfig, n: int, dtype):
+    D, R = cfg.d_model, cfg.rnn_dim
+    cw = cfg.conv_width
+    ks = jax.random.split(key, 8)
+    # Lambda init so a = sigmoid(lam)^c in ~(0.9, 0.999)
+    u = jax.random.uniform(ks[0], (n, R), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / C_SCALE) / (1 - u ** (1.0 / C_SCALE)))
+    return {
+        "wx": layers.dense_init(ks[1], (n, D, R), dtype, fan_in=D),
+        "wgate": layers.dense_init(ks[2], (n, D, R), dtype, fan_in=D),
+        "conv_w": layers.dense_init(ks[3], (n, cw, R), dtype, fan_in=cw),
+        "conv_b": jnp.zeros((n, R), dtype),
+        "lam": lam,
+        "wi_a": jnp.ones((n, R), jnp.float32) * 0.0,   # input gate weight
+        "wi_b": jnp.zeros((n, R), jnp.float32),
+        "wr_a": jnp.ones((n, R), jnp.float32) * 0.0,   # recurrence gate
+        "wr_b": jnp.zeros((n, R), jnp.float32),
+        "wo": layers.dense_init(ks[4], (n, R, D), dtype, fan_in=R),
+    }
+
+
+def _attn_init(key, cfg: ModelConfig, n: int, mp: int, dtype):
+    D, hd = cfg.d_model, cfg.head_dim
+    Hp, Kp = cfg.padded_heads(mp), cfg.replicated_kv_heads(mp)
+    ks = jax.random.split(key, 4)
+    return {"wq": layers.dense_init(ks[0], (n, D, Hp * hd), dtype, fan_in=D),
+            "wk": layers.dense_init(ks[1], (n, D, Kp * hd), dtype, fan_in=D),
+            "wv": layers.dense_init(ks[2], (n, D, Kp * hd), dtype, fan_in=D),
+            "wo": layers.dense_init(ks[3], (n, Hp * hd, D), dtype,
+                                    fan_in=Hp * hd)}
+
+
+def _mlp_init(key, cfg: ModelConfig, n: int, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {"w_gate": layers.dense_init(ks[0], (n, D, F), dtype, fan_in=D),
+            "w_up": layers.dense_init(ks[1], (n, D, F), dtype, fan_in=D),
+            "w_down": layers.dense_init(ks[2], (n, F, D), dtype, fan_in=F)}
+
+
+def _norm_init(key, cfg, n, dtype):
+    p = layers.init_norm(key, cfg.d_model, cfg.norm, dtype)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), p)
+
+
+def _layer_init(key, cfg: ModelConfig, kind: str, n: int, mp: int, dtype):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": _norm_init(ks[0], cfg, n, dtype),
+         "ln2": _norm_init(ks[1], cfg, n, dtype),
+         "mlp": _mlp_init(ks[2], cfg, n, dtype)}
+    if kind == "rec":
+        p["rec"] = _rec_init(ks[3], cfg, n, dtype)
+    else:
+        p["attn"] = _attn_init(ks[3], cfg, n, mp, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, ax: Optional[AxisInfo], **_unused):
+    mp = mp_size(ax)
+    dtype = jnp.dtype(cfg.dtype)
+    pattern, n_blocks, rest = layout(cfg)
+    keys = jax.random.split(key, len(pattern) + len(rest) + 2)
+    params: Dict[str, Any] = {
+        "embed": layers.embed_init(keys[0], cfg.padded_vocab, cfg.d_model,
+                                   dtype),
+        "final_norm": layers.init_norm(keys[1], cfg.d_model, cfg.norm, dtype),
+        "blocks": {},
+        "rest": {},
+    }
+    for i, kind in enumerate(pattern):
+        params["blocks"][str(i)] = _layer_init(keys[2 + i], cfg, kind,
+                                               n_blocks, mp, dtype)
+    for j, kind in enumerate(rest):
+        params["rest"][str(j)] = jax.tree.map(
+            lambda a: a[0],
+            _layer_init(keys[2 + len(pattern) + j], cfg, kind, 1, mp, dtype))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# temporal blocks
+# ---------------------------------------------------------------------------
+def _conv1d(u, w, b, conv_state=None):
+    """Causal depthwise temporal conv.  u: [B, T, R]; w: [cw, R].
+    conv_state: [B, cw-1, R] previous inputs (decode)."""
+    cw = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    else:
+        pad = conv_state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)            # [B, T+cw-1, R]
+    out = sum(full[:, i:i + u.shape[1]] * w[i] for i in range(cw))
+    new_state = full[:, -(cw - 1):]
+    return out + b, new_state
+
+
+def _rglru_gates(u, rp):
+    """u: [..., R] conv output -> (a, gated_input) in f32."""
+    uf = u.astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(rp["wi_a"] * uf + rp["wi_b"])
+    r_gate = jax.nn.sigmoid(rp["wr_a"] * uf + rp["wr_b"])
+    log_a = -C_SCALE * jax.nn.softplus(rp["lam"]) * r_gate
+    a = jnp.exp(log_a)
+    x_in = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i_gate * uf)
+    return a, x_in
+
+
+def _rec_block_full(x, rp, cfg: ModelConfig, ax, build_cache: bool):
+    """x: [B, T, D] -> (out, state_cache)."""
+    gate = jax.nn.gelu((x @ rp["wgate"]).astype(jnp.float32))
+    u = (x @ rp["wx"])
+    u = shard(ax, u, dp_axes(ax), None, mp_axis(ax))
+    u, conv_state = _conv1d(u, rp["conv_w"], rp["conv_b"])
+    a, x_in = _rglru_gates(u, rp)
+    # linear recurrence h_t = a_t h_{t-1} + x_t
+    if cfg.use_pallas and x.shape[1] > 1:
+        from repro.kernels import ops as kops
+        h = kops.rglru_scan(a, x_in, chunk=min(128, x.shape[1]),
+                            block_r=min(512, a.shape[-1]))
+    else:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        a_s, h = jax.lax.associative_scan(combine, (a, x_in), axis=1)
+    y = (h * gate).astype(x.dtype) @ rp["wo"]
+    cache = {}
+    if build_cache:
+        cache = {"h": h[:, -1], "conv": conv_state}
+    return y, cache
+
+
+def _rec_block_step(x, rp, state):
+    """x: [B, 1, D]; state: {h: [B,R] f32, conv: [B,cw-1,R]}"""
+    gate = jax.nn.gelu((x @ rp["wgate"]).astype(jnp.float32))
+    u = x @ rp["wx"]
+    u, conv_state = _conv1d(u, rp["conv_w"], rp["conv_b"],
+                            conv_state=state["conv"])
+    a, x_in = _rglru_gates(u, rp)
+    h = a[:, 0] * state["h"] + x_in[:, 0]
+    y = (h[:, None] * gate).astype(x.dtype) @ rp["wo"]
+    return y, {"h": h, "conv": conv_state.astype(state["conv"].dtype)}
+
+
+def _attn_full(x, apm, cfg: ModelConfig, ax, positions):
+    B, S, D = x.shape
+    mp = mp_size(ax)
+    hd = cfg.head_dim
+    Hp, Kp = cfg.padded_heads(mp), cfg.replicated_kv_heads(mp)
+    q = (x @ apm["wq"]).reshape(B, S, Hp, hd)
+    k = (x @ apm["wk"]).reshape(B, S, Kp, hd)
+    v = (x @ apm["wv"]).reshape(B, S, Kp, hd)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    chunk = min(1024, S)
+    out = layers.chunked_attention(
+        q, k, v, q_positions=positions, k_positions=positions, causal=True,
+        window=cfg.sliding_window, chunk_q=chunk, chunk_k=chunk,
+        scale=1.0 / math.sqrt(hd))
+    return out.reshape(B, S, -1) @ apm["wo"], k, v
+
+
+def _attn_step(x, apm, cfg: ModelConfig, ax, pos, kc, vc, pc):
+    B = x.shape[0]
+    mp = mp_size(ax)
+    hd = cfg.head_dim
+    Hp, Kp = cfg.padded_heads(mp), cfg.replicated_kv_heads(mp)
+    q = (x @ apm["wq"]).reshape(B, 1, Hp, hd)
+    k = (x @ apm["wk"]).reshape(B, 1, Kp, hd)
+    v = (x @ apm["wv"]).reshape(B, 1, Kp, hd)
+    q = layers.apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = layers.apply_rope(k, pos[:, None], cfg.rope_theta)
+    W = kc.shape[1]
+    slot = pos % W
+    b_idx = jnp.arange(B)
+    kc = kc.at[b_idx, slot].set(k[:, 0])
+    vc = vc.at[b_idx, slot].set(v[:, 0])
+    pc = pc.at[b_idx, slot].set(pos)
+    out = layers.decode_attention(q, kc, vc, q_position=pos, k_positions=pc,
+                                  window=cfg.sliding_window,
+                                  scale=1.0 / math.sqrt(hd))
+    return out.reshape(B, 1, -1) @ apm["wo"], kc, vc, pc
+
+
+def _mlp(x, mp_params, cfg):
+    h = jax.nn.gelu((x @ mp_params["w_gate"]).astype(jnp.float32),
+                    approximate=True).astype(x.dtype) * (x @ mp_params["w_up"])
+    return h @ mp_params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+def _apply_layer_full(x, lp, kind: str, cfg, ax, positions, build_cache):
+    h = layers.apply_norm(x, lp["ln1"], cfg.norm)
+    cache = {}
+    if kind == "rec":
+        y, cache = _rec_block_full(h, lp["rec"], cfg, ax, build_cache)
+    else:
+        y, k, v = _attn_full(h, lp["attn"], cfg, ax, positions)
+        if build_cache:
+            S = x.shape[1]
+            W = min(cfg.sliding_window, S) if cfg.sliding_window else S
+            ks = jax.lax.dynamic_slice_in_dim(k, S - W, W, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, S - W, W, axis=1)
+            ps = jnp.broadcast_to(positions[S - W:], (x.shape[0], W))
+            cache = {"k": ks, "v": vs, "pos": ps.astype(jnp.int32)}
+    x = x + y
+    h = layers.apply_norm(x, lp["ln2"], cfg.norm)
+    x = x + _mlp(h, lp["mlp"], cfg)
+    return x, cache
+
+
+def _apply_layer_step(x, lp, kind: str, cfg, ax, pos, cache):
+    h = layers.apply_norm(x, lp["ln1"], cfg.norm)
+    if kind == "rec":
+        y, new_cache = _rec_block_step(h, lp["rec"], cache)
+    else:
+        y, kc, vc, pc = _attn_step(h, lp["attn"], cfg, ax, pos,
+                                   cache["k"], cache["v"], cache["pos"])
+        new_cache = {"k": kc, "v": vc, "pos": pc}
+    x = x + y
+    h = layers.apply_norm(x, lp["ln2"], cfg.norm)
+    x = x + _mlp(h, lp["mlp"], cfg)
+    return x, new_cache
+
+
+def forward(params, tokens, cfg: ModelConfig, ax: Optional[AxisInfo], *,
+            build_cache: bool = False, cache_len=None, remat: bool = True,
+            **_unused):
+    pattern, n_blocks, rest = layout(cfg)
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = layers.embed_lookup(params["embed"], tokens,
+                            scale_by_dim=cfg.embedding_scale)
+    x = shard(ax, x, dp_axes(ax), mp_axis(ax), None)
+
+    def block_fn(x, bp):
+        x = shard(ax, x, dp_axes(ax), mp_axis(ax), None)
+        caches = {}
+        for i, kind in enumerate(pattern):
+            x, c = _apply_layer_full(x, bp[str(i)], kind, cfg, ax, positions,
+                                     build_cache)
+            caches[str(i)] = c
+        return x, caches
+
+    body = jax.checkpoint(block_fn) if remat else block_fn
+    x, caches = jax.lax.scan(lambda c, bp: body(c, bp), x, params["blocks"])
+    rest_caches = {}
+    for j, kind in enumerate(rest):
+        x, c = _apply_layer_full(x, params["rest"][str(j)], kind, cfg, ax,
+                                 positions, build_cache)
+        rest_caches[str(j)] = c
+    x = layers.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = layers.unembed(x, params["embed"],
+                            softcap=cfg.final_logit_softcap)
+    logits = shard(ax, logits, dp_axes(ax), mp_axis(ax), None)
+    aux = jnp.zeros((), jnp.float32)
+    if build_cache:
+        return logits, {"blocks": caches, "rest": rest_caches}, aux
+    return logits, aux
+
+
+def _empty_layer_cache(cfg: ModelConfig, ax, kind: str, batch: int,
+                       cache_len: int, lead: Tuple[int, ...]):
+    dtype = jnp.dtype(cfg.dtype)
+    if kind == "rec":
+        R, cw = cfg.rnn_dim, cfg.conv_width
+        return {"h": jnp.zeros(lead + (batch, R), jnp.float32),
+                "conv": jnp.zeros(lead + (batch, cw - 1, R), dtype)}
+    mp = mp_size(ax)
+    Kp, hd = cfg.replicated_kv_heads(mp), cfg.head_dim
+    W = min(cfg.sliding_window, cache_len) if cfg.sliding_window else cache_len
+    return {"k": jnp.zeros(lead + (batch, W, Kp, hd), dtype),
+            "v": jnp.zeros(lead + (batch, W, Kp, hd), dtype),
+            "pos": jnp.full(lead + (batch, W), -1, jnp.int32)}
+
+
+def init_cache(cfg: ModelConfig, ax, batch: int, cache_len: int, **_unused):
+    pattern, n_blocks, rest = layout(cfg)
+    return {
+        "blocks": {str(i): _empty_layer_cache(cfg, ax, kind, batch, cache_len,
+                                              (n_blocks,))
+                   for i, kind in enumerate(pattern)},
+        "rest": {str(j): _empty_layer_cache(cfg, ax, kind, batch, cache_len,
+                                            ())
+                 for j, kind in enumerate(rest)},
+    }
+
+
+def cache_pspecs(cfg: ModelConfig, ax: AxisInfo, **_unused):
+    from jax.sharding import PartitionSpec as P
+    pattern, _, rest = layout(cfg)
+    dp, mp = ax.batch, ax.model
+
+    def spec(kind, lead):
+        if kind == "rec":
+            return {"h": P(*lead, dp, mp),
+                    "conv": P(*lead, dp, None, mp)}
+        return {"k": P(*lead, dp, None, mp, None),
+                "v": P(*lead, dp, None, mp, None),
+                "pos": P(*lead, dp, None)}
+
+    return {
+        "blocks": {str(i): spec(kind, (None,))
+                   for i, kind in enumerate(pattern)},
+        "rest": {str(j): spec(kind, ()) for j, kind in enumerate(rest)},
+    }
+
+
+def decode_step(params, tokens, pos, cache, cfg: ModelConfig,
+                ax: Optional[AxisInfo], **_unused):
+    pattern, n_blocks, rest = layout(cfg)
+    x = layers.embed_lookup(params["embed"], tokens,
+                            scale_by_dim=cfg.embedding_scale)
+    x = shard(ax, x, dp_axes(ax), None, None)
+
+    def block_fn(carry, bp):
+        x, bcache, bi = carry
+        bc = jax.tree.map(
+            lambda t: jax.lax.dynamic_index_in_dim(t, bi, axis=0,
+                                                   keepdims=False), bcache)
+        new_c = {}
+        for i, kind in enumerate(pattern):
+            x, c = _apply_layer_step(x, bp[str(i)], kind, cfg, ax, pos,
+                                     bc[str(i)])
+            new_c[str(i)] = c
+        bcache = jax.tree.map(
+            lambda t, nc: jax.lax.dynamic_update_index_in_dim(
+                t, nc.astype(t.dtype), bi, axis=0), bcache, new_c)
+        return (x, bcache, bi + 1), None
+
+    (x, new_blocks, _), _ = jax.lax.scan(
+        block_fn, (x, cache["blocks"], jnp.zeros((), jnp.int32)),
+        params["blocks"])
+    new_rest = {}
+    for j, kind in enumerate(rest):
+        x, c = _apply_layer_step(x, params["rest"][str(j)], kind, cfg, ax,
+                                 pos, cache["rest"][str(j)])
+        new_rest[str(j)] = c
+    x = layers.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = layers.unembed(x, params["embed"],
+                            softcap=cfg.final_logit_softcap)
+    return logits, {"blocks": new_blocks, "rest": new_rest}

@@ -1,0 +1,500 @@
+"""Decoder-only transformer covering the dense / moe / vlm families.
+
+Layers are grouped into the smallest repeating *block* (DESIGN.md §4) so the
+whole stack is a single ``lax.scan`` over stacked block params:
+
+* dense (yi, glm4, granite):        block = [attn+mlp]            x L
+* gemma2:                           block = [local, global]       x L/2
+* arctic:                           block = [attn+moe(+dense res)] x L
+* llama4-maverick:                  block = [attn+mlp, attn+moe]  x L/2
+* llama-3.2-vision:                 block = [plain x4, cross+plain] x L/5
+
+KV caches are stacked per block-layer and threaded through the scan as
+``xs``/``ys``; decode writes ring-buffer slots for sliding-window layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, moe as moe_lib
+from repro.models.partition import AxisInfo, shard, mp_size, dp_axes, mp_axis
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    window: int = 0            # 0 = full attention
+    is_moe: bool = False
+    has_cross: bool = False    # gated cross-attention (vlm)
+    aux_mlp: bool = False      # dense residual (arctic) / shared expert
+
+
+def block_layout(cfg: ModelConfig, *, long_context: bool = False
+                 ) -> Tuple[List[LayerSpec], int]:
+    """Return (specs for one block, n_blocks)."""
+    L = cfg.num_layers
+    if cfg.family == "vlm" and cfg.cross_attn_period:
+        p = cfg.cross_attn_period
+        assert L % p == 0
+        specs = [LayerSpec() for _ in range(p - 1)] + [LayerSpec(has_cross=True)]
+        return specs, L // p
+    if cfg.local_global_pattern:  # gemma2: [local, global] pairs
+        p = cfg.local_global_pattern
+        assert L % p == 0
+        w_global = cfg.sliding_window if (
+            long_context and cfg.long_context_windowed) else 0
+        specs = [LayerSpec(window=cfg.sliding_window)
+                 for _ in range(p - 1)] + [LayerSpec(window=w_global)]
+        return specs, L // p
+    if cfg.num_experts and cfg.moe_layer_period > 1:  # llama4
+        p = cfg.moe_layer_period
+        assert L % p == 0
+        specs = [LayerSpec() for _ in range(p - 1)] + [
+            LayerSpec(is_moe=True, aux_mlp=cfg.shared_expert)]
+        return specs, L // p
+    if cfg.num_experts:  # arctic
+        return [LayerSpec(is_moe=True, aux_mlp=cfg.dense_residual)], L
+    return [LayerSpec()], L
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _attn_init(key, cfg: ModelConfig, n: int, mp: int, dtype):
+    D, hd = cfg.d_model, cfg.head_dim
+    Hp = cfg.padded_heads(mp)
+    Kp = cfg.replicated_kv_heads(mp)
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": layers.dense_init(kq, (n, D, Hp * hd), dtype, fan_in=D),
+        "wk": layers.dense_init(kk, (n, D, Kp * hd), dtype, fan_in=D),
+        "wv": layers.dense_init(kv, (n, D, Kp * hd), dtype, fan_in=D),
+        "wo": layers.dense_init(ko, (n, Hp * hd, D), dtype, fan_in=Hp * hd),
+    }
+
+
+def _norm_init(key, cfg: ModelConfig, n: int, dtype):
+    p = layers.init_norm(key, cfg.d_model, cfg.norm, dtype)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), p)
+
+
+def init_params(key, cfg: ModelConfig, ax: Optional[AxisInfo],
+                *, long_context: bool = False) -> Dict[str, Any]:
+    mp = mp_size(ax)
+    dtype = jnp.dtype(cfg.dtype)
+    specs, n_blocks = block_layout(cfg, long_context=long_context)
+    keys = jax.random.split(key, len(specs) + 2)
+    params: Dict[str, Any] = {
+        "embed": layers.embed_init(keys[0], cfg.padded_vocab, cfg.d_model,
+                                   dtype),
+        "final_norm": layers.init_norm(keys[1], cfg.d_model, cfg.norm, dtype),
+        "blocks": {},
+    }
+    for i, spec in enumerate(specs):
+        lk = jax.random.split(keys[2 + i], 8)
+        lp: Dict[str, Any] = {
+            "ln1": _norm_init(lk[0], cfg, n_blocks, dtype),
+            "attn": _attn_init(lk[1], cfg, n_blocks, mp, dtype),
+            "ln2": _norm_init(lk[2], cfg, n_blocks, dtype),
+        }
+        if cfg.post_norms:
+            lp["post_ln1"] = _norm_init(lk[3], cfg, n_blocks, dtype)
+            lp["post_ln2"] = _norm_init(lk[4], cfg, n_blocks, dtype)
+        if spec.is_moe:
+            lp["moe"] = moe_lib.moe_init(lk[5], cfg, dtype, n_blocks)
+            if cfg.expert_quant:
+                lp["moe"] = moe_lib.quantize_expert_weights(lp["moe"])
+            if spec.aux_mlp:
+                lp["aux_mlp"] = jax.tree.map(
+                    lambda a: a,
+                    _stacked_mlp_init(lk[6], cfg, n_blocks, dtype))
+        else:
+            lp["mlp"] = _stacked_mlp_init(lk[6], cfg, n_blocks, dtype)
+        if spec.has_cross:
+            ck = jax.random.split(lk[7], 6)
+            D, hd = cfg.d_model, cfg.head_dim
+            Hp, Kp = cfg.padded_heads(mp), cfg.replicated_kv_heads(mp)
+            lp["cross"] = {
+                "ln": _norm_init(ck[0], cfg, n_blocks, dtype),
+                "wq": layers.dense_init(ck[1], (n_blocks, D, Hp * hd), dtype,
+                                        fan_in=D),
+                "wk": layers.dense_init(ck[2], (n_blocks, D, Kp * hd), dtype,
+                                        fan_in=D),
+                "wv": layers.dense_init(ck[3], (n_blocks, D, Kp * hd), dtype,
+                                        fan_in=D),
+                "wo": layers.dense_init(ck[4], (n_blocks, Hp * hd, D), dtype,
+                                        fan_in=Hp * hd),
+                "gate": jnp.zeros((n_blocks,), jnp.float32),
+            }
+        params["blocks"][str(i)] = lp
+    return params
+
+
+def _stacked_mlp_init(key, cfg: ModelConfig, n: int, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_up": layers.dense_init(k1, (n, D, F), dtype, fan_in=D),
+         "w_down": layers.dense_init(k2, (n, F, D), dtype, fan_in=F)}
+    if cfg.gated_mlp:
+        p["w_gate"] = layers.dense_init(k3, (n, D, F), dtype, fan_in=D)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward pieces
+# ---------------------------------------------------------------------------
+def _attn_scale(cfg: ModelConfig) -> float:
+    return 1.0 / math.sqrt(cfg.head_dim)
+
+
+def _project_qkv(x, ap, cfg: ModelConfig, mp: int):
+    B, S, D = x.shape
+    hd = cfg.head_dim
+    Hp, Kp = cfg.padded_heads(mp), cfg.replicated_kv_heads(mp)
+    q = (x @ ap["wq"]).reshape(B, S, Hp, hd)
+    k = (x @ ap["wk"]).reshape(B, S, Kp, hd)
+    v = (x @ ap["wv"]).reshape(B, S, Kp, hd)
+    return q, k, v
+
+
+def _self_attention_full(x, ap, cfg: ModelConfig, ax, spec: LayerSpec,
+                         positions, chunk: int = 1024):
+    """Full-sequence (train / prefill) self attention.  Returns (out, k, v)."""
+    mp = mp_size(ax)
+    q, k, v = _project_qkv(x, ap, cfg, mp)
+    q = shard(ax, q, dp_axes(ax), None, mp_axis(ax), None)
+    k = shard(ax, k, dp_axes(ax), None, mp_axis(ax), None)
+    v = shard(ax, v, dp_axes(ax), None, mp_axis(ax), None)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True, window=spec.window,
+            softcap=cfg.attn_logit_softcap, scale=_attn_scale(cfg),
+            block_q=min(128, q.shape[1]), block_k=min(128, q.shape[1]),
+        ).transpose(0, 2, 1, 3)
+    elif cfg.causal_skip and spec.window == 0 and x.shape[1] % min(
+            chunk, x.shape[1]) == 0:
+        out = layers.chunked_attention_causal_skip(
+            q, k, v, q_positions=positions, k_positions=positions,
+            softcap=cfg.attn_logit_softcap, chunk=chunk,
+            scale=_attn_scale(cfg))
+    else:
+        out = layers.chunked_attention(
+            q, k, v, q_positions=positions, k_positions=positions,
+            causal=True, window=spec.window,
+            softcap=cfg.attn_logit_softcap,
+            chunk_q=chunk, chunk_k=chunk, scale=_attn_scale(cfg))
+    out = out.reshape(x.shape[0], x.shape[1], -1) @ ap["wo"]
+    return out, k, v
+
+
+def _self_attention_decode(x, ap, cfg: ModelConfig, ax, spec: LayerSpec,
+                           pos, kc, vc, pc, scales=None):
+    """One-token decode.  x: [B,1,D]; kc/vc: [B,W,Kp,hd] (int8 when
+    cfg.kv_quant, with ``scales``=(ks, vs) f32 [B,W,Kp]); pc: [B,W] slot
+    positions (−1=empty).  pos: [B].  Returns (out, kc, vc, pc, scales)."""
+    mp = mp_size(ax)
+    q, k, v = _project_qkv(x, ap, cfg, mp)
+    q = layers.apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = layers.apply_rope(k, pos[:, None], cfg.rope_theta)
+    W = kc.shape[1]
+    slot = (pos % W)                                              # [B]
+    b_idx = jnp.arange(x.shape[0])
+    if cfg.kv_quant:
+        ks, vs = scales
+        kq, ksc = layers.kv_quantize(k[:, 0])
+        vq, vsc = layers.kv_quantize(v[:, 0])
+        kc = kc.at[b_idx, slot].set(kq)
+        vc = vc.at[b_idx, slot].set(vq)
+        ks = ks.at[b_idx, slot].set(ksc)
+        vs = vs.at[b_idx, slot].set(vsc)
+        scales = (ks, vs)
+        k_read = layers.kv_dequantize(kc, ks, k.dtype)
+        v_read = layers.kv_dequantize(vc, vs, v.dtype)
+    else:
+        kc = kc.at[b_idx, slot].set(k[:, 0])
+        vc = vc.at[b_idx, slot].set(v[:, 0])
+        k_read, v_read = kc, vc
+    pc = pc.at[b_idx, slot].set(pos)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        out = kops.decode_attention(
+            q[:, 0], k_read.transpose(0, 2, 1, 3),
+            v_read.transpose(0, 2, 1, 3), pc, pos,
+            window=spec.window, softcap=cfg.attn_logit_softcap,
+            scale=_attn_scale(cfg),
+            block_s=min(512, k_read.shape[1]))[:, None]
+    else:
+        out = layers.decode_attention(
+            q, k_read, v_read, q_position=pos, k_positions=pc,
+            window=spec.window, softcap=cfg.attn_logit_softcap,
+            scale=_attn_scale(cfg))
+    out = out.reshape(x.shape[0], 1, -1) @ ap["wo"]
+    return out, kc, vc, pc, scales
+
+
+def _cross_attention(x, cp, cfg: ModelConfig, ax, media_kv):
+    """Gated cross attention.  media_kv = (k [B,M,Kp,hd], v [B,M,Kp,hd])."""
+    B, S, D = x.shape
+    mp = mp_size(ax)
+    hd = cfg.head_dim
+    Hp = cfg.padded_heads(mp)
+    xq = layers.apply_norm(x, cp["ln"], cfg.norm)
+    q = (xq @ cp["wq"]).reshape(B, S, Hp, hd)
+    mk, mv = media_kv
+    M = mk.shape[1]
+    mpos = jnp.arange(M, dtype=jnp.int32)
+    out = layers.chunked_attention(
+        q, mk, mv, q_positions=jnp.zeros((S,), jnp.int32),
+        k_positions=mpos, causal=False, window=0, softcap=0.0,
+        chunk_q=min(1024, S), chunk_k=M, scale=_attn_scale(cfg))
+    out = out.reshape(B, S, -1) @ cp["wo"]
+    return jnp.tanh(cp["gate"]).astype(x.dtype) * out
+
+
+def media_kv_from_embeddings(media, cp, cfg: ModelConfig, mp: int):
+    """Project stub media embeddings [B,M,D] to cross-attn K/V."""
+    B, M, D = media.shape
+    hd = cfg.head_dim
+    Kp = cfg.replicated_kv_heads(mp)
+    mk = (media @ cp["wk"]).reshape(B, M, Kp, hd)
+    mv = (media @ cp["wv"]).reshape(B, M, Kp, hd)
+    return mk, mv
+
+
+def _layer_ffn(x, lp, spec: LayerSpec, cfg: ModelConfig, ax,
+               seq_sharded: bool, moe_dispatch: str):
+    """FFN part (mlp or moe + aux). Returns (y, aux_loss)."""
+    if spec.is_moe:
+        y, aux = moe_lib.moe_apply(x, lp["moe"], cfg, ax,
+                                   seq_sharded=seq_sharded,
+                                   dispatch=moe_dispatch)
+        if spec.aux_mlp:
+            y = y + layers.mlp_apply(x, lp["aux_mlp"], gated=cfg.gated_mlp,
+                                     act=cfg.act)
+        return y, aux
+    return layers.mlp_apply(x, lp["mlp"], gated=cfg.gated_mlp,
+                            act=cfg.act), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+def forward(params, tokens, cfg: ModelConfig, ax: Optional[AxisInfo], *,
+            media=None, build_cache: bool = False,
+            cache_len: Optional[int] = None, long_context: bool = False,
+            remat: bool = True, moe_dispatch: str = "all_to_all",
+            chunk: int = 1024):
+    """tokens: [B, S] -> logits [B, S, V].  If ``build_cache`` also returns
+    the decode cache (prefill)."""
+    specs, n_blocks = block_layout(cfg, long_context=long_context)
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = layers.embed_lookup(params["embed"], tokens,
+                            scale_by_dim=cfg.embedding_scale)
+    seq_ax = mp_axis(ax) if cfg.seq_shard else None
+    x = shard(ax, x, dp_axes(ax), seq_ax, None)
+    media_kvs = None
+    if media is not None:
+        media = shard(ax, media, dp_axes(ax), None, None)
+
+    def _barrier(t):
+        # §Perf B: pin the bf16 value at the seq-parallel reshard boundary so
+        # XLA cannot hoist the norm's f32 upcast above the all-gather
+        # (observed: f32 collectives = 2x bytes without this).
+        return jax.lax.optimization_barrier(t) if cfg.bf16_boundary else t
+
+    def block_fn(x, blk_params):
+        aux_total = jnp.zeros((), jnp.float32)
+        cache_out = {}
+        x = shard(ax, x, dp_axes(ax), seq_ax, None)
+        for i, spec in enumerate(specs):
+            lp = blk_params[str(i)]
+            h = _barrier(layers.apply_norm(x, lp["ln1"], cfg.norm))
+            attn_out, k, v = _self_attention_full(
+                h, lp["attn"], cfg, ax, spec, positions, chunk=chunk)
+            if cfg.post_norms:
+                attn_out = layers.apply_norm(attn_out, lp["post_ln1"],
+                                             cfg.norm)
+            if cfg.rs_outputs:
+                attn_out = shard(ax, attn_out, dp_axes(ax), seq_ax, None)
+            x = x + attn_out
+            if spec.has_cross and media is not None:
+                mkv = media_kv_from_embeddings(media, lp["cross"], cfg,
+                                               mp_size(ax))
+                x = x + _cross_attention(x, lp["cross"], cfg, ax, mkv)
+                if build_cache:
+                    cache_out[f"ck{i}"], cache_out[f"cv{i}"] = mkv
+            h = _barrier(layers.apply_norm(x, lp["ln2"], cfg.norm))
+            ffn_out, aux = _layer_ffn(h, lp, spec, cfg, ax,
+                                      seq_sharded=(ax is not None
+                                                   and cfg.seq_shard),
+                                      moe_dispatch=moe_dispatch)
+            if cfg.post_norms:
+                ffn_out = layers.apply_norm(ffn_out, lp["post_ln2"], cfg.norm)
+            if cfg.rs_outputs:
+                ffn_out = shard(ax, ffn_out, dp_axes(ax), seq_ax, None)
+            x = x + ffn_out
+            aux_total = aux_total + aux
+            if build_cache:
+                W = spec.window if spec.window else (cache_len or S)
+                W = min(W, cache_len or S)
+                if S >= W:
+                    ks = jax.lax.dynamic_slice_in_dim(k, S - W, W, axis=1)
+                    vs = jax.lax.dynamic_slice_in_dim(v, S - W, W, axis=1)
+                    ps = jnp.broadcast_to(positions[S - W:], (B, W))
+                else:
+                    pad = W - S
+                    ks = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    vs = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    ps = jnp.broadcast_to(
+                        jnp.concatenate([positions,
+                                         jnp.full((pad,), -1, jnp.int32)]),
+                        (B, W))
+                if cfg.kv_quant:
+                    kq, ksc = layers.kv_quantize(ks)
+                    vq, vsc = layers.kv_quantize(vs)
+                    cache_out[f"k{i}"], cache_out[f"ks{i}"] = kq, ksc
+                    cache_out[f"v{i}"], cache_out[f"vs{i}"] = vq, vsc
+                else:
+                    cache_out[f"k{i}"] = ks
+                    cache_out[f"v{i}"] = vs
+                cache_out[f"pos{i}"] = ps.astype(jnp.int32)
+        return x, (cache_out, aux_total)
+
+    body = block_fn
+    if remat:
+        body = jax.checkpoint(
+            block_fn, policy=_remat_policy(cfg.remat_policy))
+    x, (caches, auxes) = jax.lax.scan(
+        lambda c, bp: body(c, bp), x, params["blocks"])
+    x = layers.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = layers.unembed(x, params["embed"],
+                            softcap=cfg.final_logit_softcap)
+    logits = shard(ax, logits, dp_axes(ax), seq_ax, None)
+    aux = jnp.sum(auxes)
+    if build_cache:
+        return logits, caches, aux
+    return logits, aux
+
+
+def _remat_policy(name: str):
+    cp = jax.checkpoint_policies
+    if name == "dots":
+        return cp.checkpoint_dots_with_no_batch_dims
+    if name == "everything":
+        return cp.everything_saveable
+    return cp.nothing_saveable
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, ax: Optional[AxisInfo], batch: int,
+               cache_len: int, *, long_context: bool = False,
+               media_tokens: int = 0):
+    """Zero-filled decode cache (stacked over blocks)."""
+    specs, n_blocks = block_layout(cfg, long_context=long_context)
+    mp = mp_size(ax)
+    Kp = cfg.replicated_kv_heads(mp)
+    hd = cfg.head_dim
+    dtype = jnp.dtype(cfg.dtype)
+    cache = {}
+    kv_dtype = jnp.int8 if cfg.kv_quant else dtype
+    for i, spec in enumerate(specs):
+        W = min(spec.window, cache_len) if spec.window else cache_len
+        cache[f"k{i}"] = jnp.zeros((n_blocks, batch, W, Kp, hd), kv_dtype)
+        cache[f"v{i}"] = jnp.zeros((n_blocks, batch, W, Kp, hd), kv_dtype)
+        cache[f"pos{i}"] = jnp.full((n_blocks, batch, W), -1, jnp.int32)
+        if cfg.kv_quant:
+            cache[f"ks{i}"] = jnp.ones((n_blocks, batch, W, Kp), jnp.float32)
+            cache[f"vs{i}"] = jnp.ones((n_blocks, batch, W, Kp), jnp.float32)
+        if spec.has_cross:
+            M = media_tokens or cfg.num_media_tokens
+            cache[f"ck{i}"] = jnp.zeros((n_blocks, batch, M, Kp, hd), dtype)
+            cache[f"cv{i}"] = jnp.zeros((n_blocks, batch, M, Kp, hd), dtype)
+    return cache
+
+
+def cache_pspecs(cfg: ModelConfig, ax: AxisInfo, *, long_context: bool = False):
+    """PartitionSpecs matching init_cache: batch->data, kv-heads->model."""
+    from jax.sharding import PartitionSpec as P
+    specs, _ = block_layout(cfg, long_context=long_context)
+    out = {}
+    dp, mp = ax.batch, ax.model
+    for i, spec in enumerate(specs):
+        out[f"k{i}"] = P(None, dp, None, mp, None)
+        out[f"v{i}"] = P(None, dp, None, mp, None)
+        out[f"pos{i}"] = P(None, dp, None)
+        if cfg.kv_quant:
+            out[f"ks{i}"] = P(None, dp, None, mp)
+            out[f"vs{i}"] = P(None, dp, None, mp)
+        if spec.has_cross:
+            out[f"ck{i}"] = P(None, dp, None, mp, None)
+            out[f"cv{i}"] = P(None, dp, None, mp, None)
+    return out
+
+
+def decode_step(params, tokens, pos, cache, cfg: ModelConfig,
+                ax: Optional[AxisInfo], *, long_context: bool = False,
+                moe_dispatch: str = "all_to_all"):
+    """tokens: [B, 1]; pos: [B] absolute position of the new token.
+    Returns (logits [B, 1, V], new_cache)."""
+    specs, n_blocks = block_layout(cfg, long_context=long_context)
+    x = layers.embed_lookup(params["embed"], tokens,
+                            scale_by_dim=cfg.embedding_scale)
+    x = shard(ax, x, dp_axes(ax), None, None)
+
+    def block_fn(carry, blk_params):
+        x, cache, bi = carry
+        blk_cache = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, bi, axis=0,
+                                                   keepdims=False), cache)
+        new_cache = dict(blk_cache)
+        x = shard(ax, x, dp_axes(ax), None, None)
+        for i, spec in enumerate(specs):
+            lp = blk_params[str(i)]
+            h = layers.apply_norm(x, lp["ln1"], cfg.norm)
+            scales = ((blk_cache[f"ks{i}"], blk_cache[f"vs{i}"])
+                      if cfg.kv_quant else None)
+            attn_out, kc, vc, pc, scales = _self_attention_decode(
+                h, lp["attn"], cfg, ax, spec, pos,
+                blk_cache[f"k{i}"], blk_cache[f"v{i}"], blk_cache[f"pos{i}"],
+                scales)
+            new_cache[f"k{i}"], new_cache[f"v{i}"] = kc, vc
+            new_cache[f"pos{i}"] = pc
+            if cfg.kv_quant:
+                new_cache[f"ks{i}"], new_cache[f"vs{i}"] = scales
+            if cfg.post_norms:
+                attn_out = layers.apply_norm(attn_out, lp["post_ln1"],
+                                             cfg.norm)
+            x = x + attn_out
+            if spec.has_cross:
+                mkv = (blk_cache[f"ck{i}"], blk_cache[f"cv{i}"])
+                x = x + _cross_attention(x, lp["cross"], cfg, ax, mkv)
+            h = layers.apply_norm(x, lp["ln2"], cfg.norm)
+            ffn_out, _ = _layer_ffn(h, lp, spec, cfg, ax, seq_sharded=False,
+                                    moe_dispatch=moe_dispatch)
+            if cfg.post_norms:
+                ffn_out = layers.apply_norm(ffn_out, lp["post_ln2"], cfg.norm)
+            x = x + ffn_out
+        cache = jax.tree.map(
+            lambda c, nc: jax.lax.dynamic_update_index_in_dim(
+                c, nc.astype(c.dtype), bi, axis=0), cache, new_cache)
+        return (x, cache, bi + 1), None
+
+    (x, new_cache, _), _ = jax.lax.scan(
+        block_fn, (x, cache, jnp.zeros((), jnp.int32)), params["blocks"])
+    x = layers.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = layers.unembed(x, params["embed"],
+                            softcap=cfg.final_logit_softcap)
+    return logits, new_cache

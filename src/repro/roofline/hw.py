@@ -1,0 +1,7 @@
+"""TPU v5e hardware constants for the roofline model (per chip)."""
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # bytes/s
+ICI_BW_PER_LINK = 50e9         # bytes/s per link (uni-directional here)
+ICI_LINKS = 4                  # 2D torus on v5e: 4 links/chip
+CHIPS_PER_POD = 256
+HBM_BYTES = 16e9               # 16 GB HBM per v5e chip

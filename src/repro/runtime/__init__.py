@@ -1,0 +1,4 @@
+from repro.runtime.runtime import Runtime  # noqa: F401
+from repro.runtime.netmodel import NetModel, nbytes  # noqa: F401
+from repro.runtime.kvs import KVS, CacheClient  # noqa: F401
+from repro.runtime.autoscaler import Autoscaler, AutoscalerConfig  # noqa: F401

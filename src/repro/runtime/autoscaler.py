@@ -1,0 +1,69 @@
+"""Queue-depth autoscaler (paper §5.1.3 / Fig 6).
+
+Monitors per-function pending work; adds replicas for saturated functions
+and trims idle over-provisioned ones, leaving slack (the paper's observed
+behavior: a couple of spare replicas after a spike settles).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.runtime.executor import ExecutorPool
+
+
+@dataclasses.dataclass
+class AutoscalerConfig:
+    interval_s: float = 0.25
+    scale_up_depth: float = 2.0      # queued per replica before scaling up
+    scale_up_count: int = 4          # replicas added per tick when saturated
+    scale_down_idle: float = 0.2     # avg depth per replica to scale down
+    min_replicas: int = 1
+    max_replicas: int = 64
+    slack: int = 2                   # keep this many spares
+
+
+class Autoscaler:
+    def __init__(self, pool: ExecutorPool, functions: Dict[str, str],
+                 cfg: Optional[AutoscalerConfig] = None):
+        """functions: fname -> resource_class to manage."""
+        self.pool = pool
+        self.functions = functions
+        self.cfg = cfg or AutoscalerConfig()
+        self._stop = False
+        self.history: List[Dict[str, int]] = []
+        self._idle_ticks: Dict[str, int] = {f: 0 for f in functions}
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+
+    def start(self):
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop = True
+
+    def _loop(self):
+        c = self.cfg
+        while not self._stop:
+            snapshot = {}
+            for fname, rclass in self.functions.items():
+                n = max(1, self.pool.replica_count(fname))
+                depth = self.pool.queue_depth(fname, rclass)
+                per = depth / n
+                if per > c.scale_up_depth and n < c.max_replicas:
+                    for _ in range(min(c.scale_up_count,
+                                       c.max_replicas - n)):
+                        self.pool.add_replica(fname, rclass)
+                    self._idle_ticks[fname] = 0
+                elif per < c.scale_down_idle and n > c.min_replicas + c.slack:
+                    self._idle_ticks[fname] += 1
+                    if self._idle_ticks[fname] >= 8:   # hysteresis
+                        self.pool.remove_replica(fname)
+                        self._idle_ticks[fname] = 0
+                else:
+                    self._idle_ticks[fname] = 0
+                snapshot[fname] = self.pool.replica_count(fname)
+            self.history.append(snapshot)
+            time.sleep(c.interval_s)

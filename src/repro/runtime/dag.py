@@ -1,0 +1,56 @@
+"""Runtime DAG: what the Cloudflow compiler emits (Cloudburst-DAG analogue).
+
+Each node is a named function over Tables with scheduling annotations:
+``resource_class`` (cpu/gpu executor pools), ``batching`` (batch-aware fn),
+``wait_any`` (wait-for-any semantics for anyof), and ``tbc`` — the
+*to-be-continued* annotation for dynamic dispatch: the node's result carries
+a resolved KVS ref and the scheduler places the continuation DAG on a
+machine likely caching that ref (paper §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.table import Table
+
+
+@dataclasses.dataclass
+class RuntimeNode:
+    name: str
+    fn: Callable[[List[Table], Any], Table]     # (tables, ctx) -> Table
+    deps: List[str]
+    resource_class: str = "cpu"
+    batching: bool = False
+    wait_any: bool = False
+    # dynamic dispatch: column holding the resolved KVS ref (or a constant)
+    locality_ref_column: Optional[str] = None
+    locality_const: Optional[str] = None
+
+
+@dataclasses.dataclass
+class RuntimeDag:
+    name: str
+    nodes: Dict[str, RuntimeNode]
+    output: str
+
+    def topo(self) -> List[RuntimeNode]:
+        order, seen = [], set()
+
+        def visit(n: str):
+            if n in seen:
+                return
+            seen.add(n)
+            for d in self.nodes[n].deps:
+                visit(d)
+            order.append(self.nodes[n])
+
+        visit(self.output)
+        return order
+
+    def validate(self):
+        for n in self.nodes.values():
+            for d in n.deps:
+                if d not in self.nodes:
+                    raise ValueError(f"{n.name} depends on unknown {d}")
+        self.topo()

@@ -1,0 +1,168 @@
+"""Executor pool: the FaaS workers (Cloudburst executor analogue).
+
+Each ``Executor`` is one worker (thread) with a local cache; it executes
+function invocations serially (one vCPU-ish).  ``resource_class`` partitions
+the pool (paper §4: hardware-aware placement — "gpu" executors model
+accelerator-attached workers).  Batch-aware functions are fed whole buckets
+dequeued from the function queue.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.runtime.kvs import KVS, CacheClient
+from repro.runtime.netmodel import NetModel, nbytes
+
+_exec_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class WorkItem:
+    fn: Callable
+    tables: List[Any]
+    produced_on: List[Optional[str]]     # executor id per input (for net cost)
+    callback: Callable                   # callback(result|None, error|None, executor_id)
+    enqueue_t: float = dataclasses.field(default_factory=time.perf_counter)
+
+
+class ExecutionContext:
+    """Passed to operators: KVS access via the executor's cache."""
+
+    def __init__(self, executor: "Executor"):
+        self.executor = executor
+        self.kvs = executor.cache.kvs
+
+    def kvs_get(self, key: str):
+        return self.executor.cache.get(key)
+
+    def kvs_put(self, key: str, value):
+        self.executor.cache.put(key, value)
+
+
+class Executor:
+    def __init__(self, kvs: KVS, net: NetModel, resource_class: str = "cpu",
+                 cache_bytes: int = 2 << 30):
+        self.id = f"{resource_class}-exec-{next(_exec_ids)}"
+        self.resource_class = resource_class
+        self.net = net
+        self.cache = CacheClient(kvs, self.id, cache_bytes)
+        self.q: "queue.Queue[WorkItem]" = queue.Queue()
+        self._stop = False
+        self.busy = False
+        self.completed = 0
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name=self.id)
+        self._thread.start()
+
+    @property
+    def load(self) -> int:
+        return self.q.qsize() + (1 if self.busy else 0)
+
+    def submit(self, item: WorkItem):
+        self.q.put(item)
+
+    def _loop(self):
+        while not self._stop:
+            try:
+                item = self.q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            self.busy = True
+            try:
+                self.net.charge_invoke()   # FaaS invocation overhead
+                # charge network for inputs shipped from other executors
+                for t, src in zip(item.tables, item.produced_on):
+                    if src is not None and src != self.id:
+                        self.net.charge(nbytes(t))
+                ctx = ExecutionContext(self)
+                result = item.fn(item.tables, ctx)
+                item.callback(result, None, self.id)
+            except BaseException as e:
+                item.callback(None, e, self.id)
+            finally:
+                self.busy = False
+                self.completed += 1
+
+    def stop(self):
+        self._stop = True
+
+
+class ExecutorPool:
+    """All executors, partitioned by resource class, plus per-function
+    replica assignment (the autoscaler mutates assignments)."""
+
+    def __init__(self, kvs: KVS, net: NetModel,
+                 n_cpu: int = 4, n_gpu: int = 0,
+                 cache_bytes: int = 2 << 30):
+        self.kvs = kvs
+        self.net = net
+        self.cache_bytes = cache_bytes
+        self.executors: Dict[str, Executor] = {}
+        self._lock = threading.Lock()
+        for _ in range(n_cpu):
+            self.add_executor("cpu")
+        for _ in range(n_gpu):
+            self.add_executor("gpu")
+        # function name -> executor ids allowed to run it (None = any in class)
+        self.assignment: Dict[str, List[str]] = {}
+
+    def add_executor(self, resource_class: str) -> Executor:
+        ex = Executor(self.kvs, self.net, resource_class, self.cache_bytes)
+        with self._lock:
+            self.executors[ex.id] = ex
+        return ex
+
+    def by_class(self, resource_class: str) -> List[Executor]:
+        with self._lock:
+            return [e for e in self.executors.values()
+                    if e.resource_class == resource_class]
+
+    def candidates(self, fname: str, resource_class: str) -> List[Executor]:
+        with self._lock:
+            ids = self.assignment.get(fname)
+            if ids:
+                got = [self.executors[i] for i in ids
+                       if i in self.executors]
+                if got:
+                    return got
+        return self.by_class(resource_class)
+
+    # -- autoscaler hooks ----------------------------------------------------
+    def assign(self, fname: str, executor_ids: List[str]):
+        with self._lock:
+            self.assignment[fname] = list(executor_ids)
+
+    def add_replica(self, fname: str, resource_class: str) -> str:
+        ex = self.add_executor(resource_class)
+        with self._lock:
+            self.assignment.setdefault(fname, []).append(ex.id)
+        return ex.id
+
+    def remove_replica(self, fname: str) -> Optional[str]:
+        with self._lock:
+            ids = self.assignment.get(fname) or []
+            if len(ids) <= 1:
+                return None
+            eid = ids.pop()
+            ex = self.executors.pop(eid, None)
+        if ex:
+            ex.stop()
+        return eid
+
+    def replica_count(self, fname: str) -> int:
+        with self._lock:
+            ids = self.assignment.get(fname)
+            return len(ids) if ids else 0
+
+    def queue_depth(self, fname: str, resource_class: str = "cpu") -> int:
+        return sum(e.load for e in self.candidates(fname, resource_class))
+
+    def stop(self):
+        with self._lock:
+            for e in self.executors.values():
+                e.stop()

@@ -1,0 +1,210 @@
+"""The runtime facade: scheduler + client (Cloudburst analogue).
+
+Scheduling policy (paper §2.3/§4):
+* partition executors by resource class; per-function replica assignment
+* locality-aware: prefer an executor whose cache holds the request's ref
+  (dynamic dispatch: the ref is resolved by the *to-be-continued* half of a
+  split DAG and fed back to the scheduler before the continuation is placed)
+* wait-for-any: anyof nodes fire on the first completed upstream
+* batching: batch-aware functions are fed buckets via a per-function Batcher
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import random
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Dict, List, Optional
+
+from repro.core.table import Table
+from repro.runtime.dag import RuntimeDag, RuntimeNode
+from repro.runtime.executor import ExecutorPool, WorkItem
+from repro.runtime.kvs import KVS
+from repro.runtime.netmodel import NetModel
+from repro.serving.batcher import Batcher
+
+_req_ids = itertools.count()
+
+
+class Runtime:
+    def __init__(self, *, n_cpu: int = 4, n_gpu: int = 0,
+                 net: Optional[NetModel] = None,
+                 cache_bytes: int = 2 << 30,
+                 max_batch: int = 10, batch_wait_ms: float = 2.0,
+                 seed: int = 0):
+        self.net = net or NetModel()
+        self.kvs = KVS(self.net)
+        self.pool = ExecutorPool(self.kvs, self.net, n_cpu=n_cpu, n_gpu=n_gpu,
+                                 cache_bytes=cache_bytes)
+        self.dags: Dict[str, RuntimeDag] = {}
+        self.max_batch = max_batch
+        self.batch_wait_ms = batch_wait_ms
+        self._batchers: Dict[str, Batcher] = {}
+        self._rng = random.Random(seed)
+        self.metrics: Dict[str, List[float]] = {}
+
+    # -- registration ---------------------------------------------------------
+    def register_dag(self, dag: RuntimeDag):
+        dag.validate()
+        self.dags[dag.name] = dag
+
+    # -- scheduling -------------------------------------------------------------
+    def pick_executor(self, node: RuntimeNode,
+                      locality_key: Optional[str] = None):
+        cands = self.pool.candidates(node.name, node.resource_class)
+        if not cands:
+            raise RuntimeError(
+                f"no executors for class {node.resource_class!r}")
+        if locality_key is not None:
+            cached = self.kvs.cached_where(locality_key)
+            local = [e for e in cands if e.id in cached]
+            if local:
+                return min(local, key=lambda e: e.load)
+        lo = min(e.load for e in cands)
+        best = [e for e in cands if e.load == lo]
+        return self._rng.choice(best)
+
+    def dispatch(self, node: RuntimeNode, tables: List[Table],
+                 produced_on: List[Optional[str]], callback,
+                 locality_key: Optional[str] = None):
+        if node.batching:
+            self._dispatch_batched(node, tables, produced_on, callback)
+            return
+        ex = self.pick_executor(node, locality_key)
+        ex.submit(WorkItem(fn=node.fn, tables=tables,
+                           produced_on=produced_on, callback=callback))
+
+    def _dispatch_batched(self, node: RuntimeNode, tables, produced_on,
+                          callback):
+        b = self._batchers.get(node.name)
+        if b is None:
+            def batched(arg_list):
+                # merge all request tables into one invocation (paper §4)
+                merged: List[Table] = [t for (ts, _) in arg_list
+                                       for t in ts]
+                ex = self.pick_executor(node)
+                done = threading.Event()
+                holder: Dict[str, Any] = {}
+
+                def cb(result, error, exec_id):
+                    holder["r"], holder["e"] = result, error
+                    done.set()
+
+                big = merged[0].with_rows(
+                    [r for t in merged for r in t.rows])
+                ex.submit(WorkItem(fn=node.fn, tables=[big],
+                                   produced_on=[None], callback=cb))
+                done.wait()
+                if holder.get("e"):
+                    raise holder["e"]
+                result: Table = holder["r"]
+                # demultiplex by row id
+                outs = []
+                for ts, _ in arg_list:
+                    ids = {r.row_id for t in ts for r in t.rows}
+                    outs.append(result.with_rows(
+                        [r for r in result.rows if r.row_id in ids]))
+                return outs
+
+            b = Batcher(batched, max_batch=self.max_batch,
+                        max_wait_ms=self.batch_wait_ms)
+            self._batchers[node.name] = b
+
+        def waiter():
+            try:
+                r = b.call((tables, produced_on))
+                callback(r, None, None)
+            except BaseException as e:
+                callback(None, e, None)
+
+        threading.Thread(target=waiter, daemon=True).start()
+
+    # -- execution ----------------------------------------------------------------
+    def call_dag(self, name: str, table: Table) -> Future:
+        dag = self.dags[name]
+        fut: Future = Future()
+        _DagExecution(self, dag, table, fut).start()
+        return fut
+
+    def stop(self):
+        self.pool.stop()
+        for b in self._batchers.values():
+            b.close()
+
+
+class _DagExecution:
+    def __init__(self, rt: Runtime, dag: RuntimeDag, table: Table,
+                 fut: Future):
+        self.rt = rt
+        self.dag = dag
+        self.input = table
+        self.fut = fut
+        self.lock = threading.Lock()
+        self.results: Dict[str, Table] = {}
+        self.produced_on: Dict[str, Optional[str]] = {}
+        self.dispatched: set = set()
+        self.t0 = time.perf_counter()
+
+    def start(self):
+        self._advance()
+
+    def _ready(self, node: RuntimeNode) -> Optional[List[str]]:
+        """deps to consume, or None if not ready."""
+        if node.wait_any:
+            done = [d for d in node.deps if d in self.results]
+            return [done[0]] if done else None
+        if all(d in self.results for d in node.deps):
+            return list(node.deps)
+        return None
+
+    def _advance(self):
+        with self.lock:
+            to_run = []
+            for node in self.dag.nodes.values():
+                if node.name in self.dispatched or node.name in self.results:
+                    continue
+                deps = self._ready(node)
+                if deps is None:
+                    continue
+                self.dispatched.add(node.name)
+                tables = ([self.input] if not node.deps else
+                          [self.results[d] for d in deps])
+                srcs = ([None] if not node.deps else
+                        [self.produced_on.get(d) for d in deps])
+                to_run.append((node, tables, srcs))
+        for node, tables, srcs in to_run:
+            locality_key = node.locality_const
+            if node.locality_ref_column is not None and tables:
+                # dynamic dispatch: resolved ref from the upstream's output
+                t = tables[0]
+                try:
+                    idx = t.column_index(node.locality_ref_column)
+                    if t.rows:
+                        locality_key = t.rows[0].values[idx]
+                except KeyError:
+                    pass
+            self.rt.dispatch(node, tables, srcs,
+                             self._make_callback(node), locality_key)
+
+    def _make_callback(self, node: RuntimeNode):
+        def cb(result, error, exec_id):
+            if error is not None:
+                if not self.fut.done():
+                    self.fut.set_exception(error)
+                return
+            finish = False
+            with self.lock:
+                if node.name in self.results:   # competitive duplicate
+                    return
+                self.results[node.name] = result
+                self.produced_on[node.name] = exec_id
+                if node.name == self.dag.output:
+                    finish = True
+            if finish:
+                if not self.fut.done():
+                    self.fut.set_result(result)
+                return
+            self._advance()
+        return cb

@@ -1,0 +1,89 @@
+"""Request batcher — the paper's Batching optimization (§4, Fig 8).
+
+Collects individual requests into one batched model invocation (pad to the
+batch bucket), runs a single jitted call, and demultiplexes the results.
+Used by the runtime's batch-aware executor; also usable standalone.
+"""
+from __future__ import annotations
+
+import threading
+import queue
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class BatchItem:
+    __slots__ = ("args", "event", "result", "error", "enqueue_t")
+
+    def __init__(self, args):
+        self.args = args
+        self.event = threading.Event()
+        self.result = None
+        self.error: Optional[BaseException] = None
+        self.enqueue_t = time.perf_counter()
+
+
+class Batcher:
+    """Micro-batching queue in front of a batched function.
+
+    ``fn`` maps a list of per-request arg dicts to a list of results (it is
+    responsible for stacking/padding).  ``max_batch`` bounds the bucket
+    (paper default: 10); ``max_wait_ms`` bounds queueing delay.
+    """
+
+    def __init__(self, fn: Callable[[List[Any]], List[Any]], *,
+                 max_batch: int = 10, max_wait_ms: float = 2.0):
+        self.fn = fn
+        self.max_batch = max_batch
+        self.max_wait = max_wait_ms / 1000.0
+        self.q: "queue.Queue[BatchItem]" = queue.Queue()
+        self._stop = False
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        self.batch_sizes: List[int] = []
+
+    def submit(self, args) -> BatchItem:
+        item = BatchItem(args)
+        self.q.put(item)
+        return item
+
+    def call(self, args, timeout: Optional[float] = 30.0):
+        item = self.submit(args)
+        if not item.event.wait(timeout):
+            raise TimeoutError("batched call timed out")
+        if item.error is not None:
+            raise item.error
+        return item.result
+
+    def _loop(self):
+        while not self._stop:
+            try:
+                first = self.q.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            items = [first]
+            deadline = time.perf_counter() + self.max_wait
+            while len(items) < self.max_batch:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    break
+                try:
+                    items.append(self.q.get(timeout=remaining))
+                except queue.Empty:
+                    break
+            self.batch_sizes.append(len(items))
+            try:
+                results = self.fn([it.args for it in items])
+                for it, r in zip(items, results):
+                    it.result = r
+            except BaseException as e:  # propagate to all waiters
+                for it in items:
+                    it.error = e
+            for it in items:
+                it.event.set()
+
+    def close(self):
+        self._stop = True
+        self._thread.join(timeout=1.0)

@@ -1,0 +1,76 @@
+"""Serving engine: jitted prefill/decode with KV-cache management.
+
+This is the "black-box model operator" that Cloudflow dataflows wrap: a
+``ServingEngine`` exposes ``generate`` (prefill + N decode steps) and
+``step`` primitives.  Batching across requests is handled one level up by
+``repro.runtime``'s batching executor (paper §4: Batching) via
+``repro.serving.batcher``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.registry import Model, build_model
+
+
+@dataclasses.dataclass
+class ServingEngine:
+    model: Model
+    cache_len: int = 256
+
+    def __post_init__(self):
+        self._prefill = jax.jit(
+            functools.partial(self._prefill_impl),
+            static_argnames=("cache_len",))
+        self._decode = jax.jit(self._decode_impl)
+
+    # --- impl -------------------------------------------------------------
+    def _prefill_impl(self, params, batch, *, cache_len: int):
+        return self.model.prefill(params, batch, cache_len=cache_len)
+
+    def _decode_impl(self, params, tokens, pos, cache):
+        return self.model.decode_step(params, tokens, pos, cache)
+
+    # --- public -----------------------------------------------------------
+    def prefill(self, params, batch: Dict[str, Any],
+                cache_len: Optional[int] = None):
+        return self._prefill(params, batch,
+                             cache_len=cache_len or self.cache_len)
+
+    def decode(self, params, tokens, pos, cache):
+        return self._decode(params, tokens, pos, cache)
+
+    def generate(self, params, batch: Dict[str, Any], max_new_tokens: int,
+                 *, temperature: float = 0.0, key=None) -> np.ndarray:
+        """Greedy (or sampled) generation.  Returns [B, max_new_tokens]."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        cache_len = max(self.cache_len, S + max_new_tokens)
+        logits, cache = self.prefill(params, batch, cache_len=cache_len)
+        out = []
+        cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        for i in range(max_new_tokens):
+            out.append(np.asarray(cur))
+            pos = jnp.full((B,), S + i, jnp.int32)
+            logits, cache = self.decode(params, cur, pos, cache)
+            if temperature > 0.0 and key is not None:
+                key, sub = jax.random.split(key)
+                cur = jax.random.categorical(
+                    sub, logits[:, -1] / temperature).astype(jnp.int32)[:, None]
+            else:
+                cur = jnp.argmax(logits[:, -1], axis=-1).astype(
+                    jnp.int32)[:, None]
+        return np.concatenate(out, axis=1)
+
+
+def make_engine(cfg: ModelConfig, *, cache_len: int = 256,
+                ax=None, long_context: bool = False) -> ServingEngine:
+    return ServingEngine(build_model(cfg, ax, long_context=long_context),
+                         cache_len=cache_len)

@@ -1,0 +1,82 @@
+"""Minimal but real checkpointing: flat-key .npz of the full state pytree.
+
+Saves params + optimizer state + step with dtype preservation (bf16 stored
+as uint16 view).  Path layout: <dir>/step_<n>.npz plus a LATEST pointer, with
+atomic rename so a crashed save never corrupts the latest checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+def save(path: str, state, step: int) -> str:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(state)
+    arrays = {}
+    meta = {}
+    for k, v in flat.items():
+        a = np.asarray(v)
+        if a.dtype == jnp.bfloat16:
+            arrays[k] = a.view(np.uint16)
+            meta[k] = "bfloat16"
+        else:
+            arrays[k] = a
+            meta[k] = str(a.dtype)
+    fname = os.path.join(path, f"step_{step}.npz")
+    tmp = fname + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, __meta__=json.dumps(meta), **arrays)
+    os.replace(tmp, fname)
+    latest = os.path.join(path, "LATEST")
+    with open(latest + ".tmp", "w") as f:
+        f.write(str(step))
+    os.replace(latest + ".tmp", latest)
+    return fname
+
+
+def latest_step(path: str) -> int:
+    with open(os.path.join(path, "LATEST")) as f:
+        return int(f.read().strip())
+
+
+def restore(path: str, like, step: int = -1):
+    """Restore into the structure of ``like`` (a template pytree)."""
+    if step < 0:
+        step = latest_step(path)
+    data = np.load(os.path.join(path, f"step_{step}.npz"), allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    flat_like = _flatten(like)
+    out = {}
+    for k in flat_like:
+        a = data[k]
+        if meta[k] == "bfloat16":
+            a = a.view(jnp.bfloat16)
+        out[k] = jnp.asarray(a)
+    # rebuild tree
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    keys = [_SEP.join(_path_str(p) for p in path) for path, _ in paths_leaves]
+    return jax.tree_util.tree_unflatten(treedef, [out[k] for k in keys])

@@ -1,0 +1,158 @@
+"""Optimizers: AdamW and Adafactor (for the 400-480B MoEs, DESIGN.md §4).
+
+Implemented from scratch (no optax dependency).  State pytrees mirror the
+param pytree so they inherit the same PartitionSpecs (ZeRO-style: the FSDP
+``data``-axis sharding on params divides optimizer state per-chip memory by
+the full mesh size).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adafactor | sgdm
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    # adafactor
+    factored_min_dim: int = 128
+    decay_rate: float = 0.8
+
+
+def schedule(cfg: OptConfig, step):
+    """Linear warmup then constant (kept simple; cosine in train loop opts)."""
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1),
+                       1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(
+        lambda t: jnp.sum(jnp.square(t.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def clip_scale(tree, max_norm: float):
+    """Scalar clip factor — applied per-leaf inside the update to avoid
+    materializing a scaled copy of the whole grad tree (peak-memory)."""
+    norm = global_norm(tree)
+    return jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9)), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    scale, gnorm = clip_scale(grads, cfg.grad_clip)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / (1 - b1 ** step.astype(jnp.float32))
+        vh = v / (1 - b2 ** step.astype(jnp.float32))
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, gnorm
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; no first moment — PaLM-style)
+# ---------------------------------------------------------------------------
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 128 and p.shape[-2] >= 128
+
+
+def adafactor_init(params):
+    def init(p):
+        if _factored(p):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"v": jax.tree.map(init, params,
+                              is_leaf=lambda x: isinstance(x, jax.Array)),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(params, grads, state, cfg: OptConfig):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    scale, gnorm = clip_scale(grads, cfg.grad_clip)
+    beta = 1.0 - (step.astype(jnp.float32) ** -cfg.decay_rate)
+
+    def upd(p, g, v):
+        g = g.astype(jnp.float32) * scale
+        g2 = jnp.square(g) + 1e-30
+        if _factored(p):
+            vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = (vr[..., None] / jnp.mean(vr, axis=-1, keepdims=True)[..., None]
+                     ) * vc[..., None, :]
+            delta = g * jax.lax.rsqrt(denom + 1e-30)
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            vv = beta * v["v"] + (1 - beta) * g2
+            delta = g * jax.lax.rsqrt(vv + 1e-30)
+            new_v = {"v": vv}
+        # update clipping (RMS <= 1), per Adafactor
+        rms = jnp.sqrt(jnp.mean(jnp.square(delta)) + 1e-30)
+        delta = delta / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), new_v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_v = tdef.flatten_up_to(state["v"])
+    # chain leaf updates with optimization_barrier so XLA does not overlap
+    # the f32 temporaries of several GB-scale expert leaves (peak memory)
+    outs = []
+    token = gnorm
+    order = sorted(range(len(flat_p)), key=lambda i: -flat_p[i].size)
+    results = [None] * len(flat_p)
+    for i in order:
+        g = jax.lax.optimization_barrier((flat_g[i], token))[0]
+        new_p, new_v_leaf = upd(flat_p[i], g, flat_v[i])
+        token = jax.lax.optimization_barrier(
+            (jnp.zeros((), jnp.float32), new_p))[0]
+        results[i] = (new_p, new_v_leaf)
+    new_params = tdef.unflatten([r[0] for r in results])
+    new_v = tdef.unflatten([r[1] for r in results])
+    return new_params, {"v": new_v, "step": step}, gnorm
+
+
+# ---------------------------------------------------------------------------
+def make_optimizer(name: str, cfg: Optional[OptConfig] = None):
+    cfg = cfg or OptConfig(name=name)
+    if name == "adamw":
+        return adamw_init, lambda p, g, s: adamw_update(p, g, s, cfg)
+    if name == "adafactor":
+        return adafactor_init, lambda p, g, s: adafactor_update(p, g, s, cfg)
+    raise ValueError(f"unknown optimizer {name}")

@@ -1,0 +1,75 @@
+"""Training step: loss -> grads -> optimizer update, mesh-aware."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+from repro.training import optim
+
+
+class TrainState(dict):
+    """{"params": ..., "opt": ...} — plain dict for easy pytree handling."""
+
+
+def init_train_state(model: Model, key, opt_cfg: Optional[optim.OptConfig]
+                     = None) -> Dict[str, Any]:
+    params = model.init(key)
+    opt_name = model.cfg.optimizer
+    opt_init, _ = optim.make_optimizer(opt_name, opt_cfg)
+    return {"params": params, "opt": opt_init(params)}
+
+
+def make_train_step(model: Model, opt_cfg: Optional[optim.OptConfig] = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    When ``cfg.grad_accum > 1`` the global batch is split into microbatches
+    scanned sequentially with f32 grad accumulation — this is what fits the
+    480B-class MoE training under 16 GB/chip (DESIGN.md §4)."""
+    _, opt_update = optim.make_optimizer(model.cfg.optimizer, opt_cfg)
+    accum = max(1, model.cfg.grad_accum)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, remat=True)
+        return loss, metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda t: t.reshape((accum, t.shape[0] // accum)
+                                    + t.shape[1:]), batch)
+
+            adt = jnp.dtype(model.cfg.accum_dtype)
+
+            def micro_step(acc, mb):
+                (l, met), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gi: a + (gi / accum).astype(adt), acc, g)
+                return acc, (l, met)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, adt), params)
+            grads, (losses, metrics) = jax.lax.scan(micro_step, zeros, micro)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, metrics)
+        new_params, new_opt, gnorm = opt_update(params, grads, state["opt"])
+        metrics = dict(metrics)
+        metrics.update({"loss": loss, "grad_norm": gnorm})
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch, remat=False)
+        return {"loss": loss, **metrics}
+    return eval_step

@@ -1,0 +1,134 @@
+"""Architecture-specific feature semantics (beyond shape smoke tests)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_tiny_config
+from repro.models import build_model
+from repro.models.transformer import block_layout
+from repro.models import rglru as rglru_lib
+
+
+def test_gemma2_local_global_block_layout():
+    cfg = get_tiny_config("gemma2-9b")
+    specs, n_blocks = block_layout(cfg)
+    assert len(specs) == 2
+    assert specs[0].window == cfg.sliding_window   # local layer
+    assert specs[1].window == 0                    # global layer
+    # long-context mode windows the global layers (DESIGN §5)
+    specs_lc, _ = block_layout(cfg, long_context=True)
+    assert specs_lc[1].window == cfg.sliding_window
+
+
+def test_gemma2_softcap_bounds_logits():
+    cfg = get_tiny_config("gemma2-9b")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    # blow up the embedding scale: softcap must still bound final logits
+    params["embed"] = params["embed"] * 100.0
+    logits, _ = m.logits(params, {"tokens": jnp.ones((1, 8), jnp.int32)},
+                         remat=False)
+    assert float(jnp.max(jnp.abs(logits))) <= cfg.final_logit_softcap + 1e-3
+
+
+def test_vlm_cross_attention_gate_starts_closed_then_opens():
+    cfg = get_tiny_config("llama-3.2-vision-11b")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jnp.ones((1, 8), jnp.int32)
+    media_a = jnp.zeros((1, cfg.num_media_tokens, cfg.d_model), jnp.bfloat16)
+    media_b = (jax.random.normal(
+        jax.random.PRNGKey(1),
+        (1, cfg.num_media_tokens, cfg.d_model)) * 0.1).astype(jnp.bfloat16)
+    la, _ = m.logits(params, {"tokens": toks, "media": media_a}, remat=False)
+    lb, _ = m.logits(params, {"tokens": toks, "media": media_b}, remat=False)
+    # gate = tanh(0) = 0 at init: media must have NO effect (llama3.2 design)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-5)
+    # open the gates: media must now change the logits
+    for blk in params["blocks"].values():
+        if "cross" in blk:
+            blk["cross"]["gate"] = jnp.ones_like(blk["cross"]["gate"])
+    la, _ = m.logits(params, {"tokens": toks, "media": media_a}, remat=False)
+    lb, _ = m.logits(params, {"tokens": toks, "media": media_b}, remat=False)
+    assert float(jnp.max(jnp.abs(la - lb))) > 1e-3
+
+
+def test_whisper_encoder_frames_affect_decoder():
+    cfg = get_tiny_config("whisper-medium")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jnp.ones((1, 8), jnp.int32)
+    fa = jnp.zeros((1, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    fb = (jax.random.normal(jax.random.PRNGKey(1),
+                            (1, cfg.encoder_seq, cfg.d_model))
+          * 0.1).astype(jnp.bfloat16)
+    la, _ = m.logits(params, {"tokens": toks, "frames": fa}, remat=False)
+    lb, _ = m.logits(params, {"tokens": toks, "frames": fb}, remat=False)
+    assert float(jnp.max(jnp.abs(la - lb))) > 1e-3  # cross-attn is ungated
+
+
+def test_rglru_pattern_two_rec_one_attn():
+    cfg = get_tiny_config("recurrentgemma-2b")
+    pattern, n_blocks, rest = rglru_lib.layout(cfg)
+    assert pattern == ["rec", "rec", "attn"]
+    types = rglru_lib.layer_types(cfg)
+    assert len(types) == cfg.num_layers
+    assert types.count("attn") == cfg.num_layers // 3
+
+
+def test_mqa_cache_has_single_kv_head():
+    cfg = get_tiny_config("granite-34b")
+    assert cfg.num_kv_heads == 1
+    m = build_model(cfg)
+    cache = m.init_cache(batch=2, cache_len=8)
+    assert cache["k0"].shape[-2] == 1  # Kp == kv heads without a mesh
+
+
+def test_moe_aux_loss_nonzero_and_dense_residual_present():
+    cfg = get_tiny_config("arctic-480b")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    assert "aux_mlp" in params["blocks"]["0"]       # dense residual
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    _, aux = m.logits(params, {"tokens": toks}, remat=False)
+    assert float(aux) > 0.0
+
+
+def test_llama4_interleaved_moe():
+    cfg = get_tiny_config("llama4-maverick-400b-a17b")
+    specs, n_blocks = block_layout(cfg)
+    assert len(specs) == 2
+    assert not specs[0].is_moe and specs[1].is_moe
+    assert specs[1].aux_mlp  # shared expert
+
+
+def test_rwkv_decay_in_unit_interval():
+    cfg = get_tiny_config("rwkv6-1.6b")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    # w = exp(-exp(w0 + lora)) must be in (0, 1): check w0 produces that
+    w = jnp.exp(-jnp.exp(params["blocks"]["w0"]))
+    assert float(w.min()) > 0.0 and float(w.max()) < 1.0
+
+
+def test_sliding_window_limits_attention_reach():
+    """A token far outside the window must not influence a local-only arch
+    configured with window smaller than the distance."""
+    cfg = dataclasses.replace(get_tiny_config("gemma2-9b"),
+                              sliding_window=8, num_layers=2)
+    # long_context mode windows BOTH layers (gemma2 long_context_windowed)
+    m = build_model(cfg, long_context=True)
+    params = m.init(jax.random.PRNGKey(0))
+    base = jax.random.randint(jax.random.PRNGKey(1), (1, 32), 0,
+                              cfg.vocab_size)
+    changed = base.at[0, 0].set((base[0, 0] + 1) % cfg.vocab_size)
+    la, _ = m.logits(params, {"tokens": base}, remat=False)
+    lb, _ = m.logits(params, {"tokens": changed}, remat=False)
+    # last position is > window away from position 0 in both layers
+    np.testing.assert_allclose(np.asarray(la[:, -1]), np.asarray(lb[:, -1]),
+                               atol=1e-2)
+    assert float(jnp.max(jnp.abs(la[:, 0] - lb[:, 0]))) > 1e-3

@@ -1,0 +1,93 @@
+import pytest
+
+from repro.core.dataflow import Dataflow
+from repro.core.operators import TypecheckError
+from repro.core.table import Table
+
+
+def _ensemble():
+    def pre(x: int) -> float:
+        return x * 1.0
+    def m1(v: float) -> tuple[str, float]:
+        return "m1", v + 0.1
+    def m2(v: float) -> tuple[str, float]:
+        return "m2", v + 0.5
+    fl = Dataflow([("x", int)])
+    base = fl.map(pre, names=["v"])
+    a = base.map(m1, names=["label", "conf"])
+    b = base.map(m2, names=["label", "conf"])
+    fl.output = a.union(b).agg("max", "conf")
+    return fl
+
+
+def test_ensemble_local():
+    fl = _ensemble()
+    out = fl.execute_local(Table([("x", int)], [(1,), (2,)]))
+    assert out.to_dicts() == [{"group": None, "max": 2.5}]
+
+
+def test_output_must_derive():
+    f1 = Dataflow([("x", int)])
+    f2 = Dataflow([("x", int)])
+    def f(x: int) -> int:
+        return x
+    node = f2.map(f)
+    with pytest.raises(ValueError):
+        f1.output = node
+
+
+def test_typecheck_error_propagates():
+    fl = Dataflow([("x", str)])
+    def f(x: int) -> int:
+        return x
+    fl.output = fl.map(f)
+    with pytest.raises(TypecheckError):
+        fl.typecheck()
+
+
+def test_missing_output():
+    fl = Dataflow([("x", int)])
+    with pytest.raises(ValueError):
+        fl.typecheck()
+
+
+def test_extend_composition():
+    def inc(x: int) -> int:
+        return x + 1
+    def dbl(x: int) -> int:
+        return x * 2
+    f1 = Dataflow([("x", int)])
+    f1.output = f1.map(inc, names=["x"])
+    f2 = Dataflow([("x", int)])
+    f2.output = f2.map(dbl, names=["x"])
+    combined = f1.extend(f2)
+    out = combined.execute_local(Table([("x", int)], [(3,)]))
+    assert out.rows[0].values == (8,)
+
+
+def test_cascade_left_join():
+    def simple(v: float) -> tuple[str, float]:
+        return "s", 0.9 if v < 1 else 0.3
+    def low(label: str, conf: float) -> bool:
+        return conf < 0.85
+    def complex_m(label: str, conf: float) -> tuple[str, float]:
+        return "c", 0.99
+    fl = Dataflow([("v", float)])
+    s = fl.map(simple, names=["label", "conf"])
+    c = s.filter(low).map(complex_m, names=["clabel", "cconf"])
+    fl.output = s.join(c, how="left")
+    out = fl.execute_local(Table([("v", float)], [(0.5,), (2.0,)]))
+    d = out.to_dicts()
+    assert d[0]["clabel"] is None          # confident: cascade skipped
+    assert d[1]["clabel"] == "c"           # low confidence: escalated
+
+
+def test_row_id_persists_through_pipeline():
+    def f(x: int) -> int:
+        return x + 1
+    fl = Dataflow([("x", int)])
+    fl.output = fl.map(f, names=["x"]).map(f, names=["x"])
+    t = Table([("x", int)], [(1,), (2,)])
+    in_ids = [r.row_id for r in t.rows]
+    out = fl.execute_local(t)
+    assert [r.row_id for r in out.rows] == in_ids

@@ -1,0 +1,142 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+All runs use interpret=True (CPU container; TPU is the lowering target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(shape, dtype, scale=0.3, key=KEY):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,K,S,hd,bq,bk", [
+    (1, 2, 2, 128, 64, 64, 64),
+    (2, 4, 2, 256, 64, 128, 128),
+    (1, 4, 1, 256, 128, 128, 64),   # MQA, uneven blocks
+])
+def test_flash_attention_sweep(B, H, K, S, hd, bq, bk, dtype):
+    q = rand((B, H, S, hd), dtype)
+    k = rand((B, K, S, hd), dtype)
+    v = rand((B, K, S, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                              interpret=True)
+    expect = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out.astype(np.float32),
+                               expect.astype(np.float32),
+                               atol=tol(dtype), rtol=tol(dtype))
+
+
+@pytest.mark.parametrize("window,softcap,causal", [
+    (0, 0.0, False), (64, 0.0, True), (0, 30.0, True), (32, 50.0, True)])
+def test_flash_attention_masks(window, softcap, causal):
+    B, H, K, S, hd = 1, 2, 1, 128, 64
+    q, k, v = (rand((B, n, S, hd), jnp.float32) for n in (H, K, K))
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, block_q=64, block_k=64,
+                              interpret=True)
+    expect = ref.attention_ref(q, k, v, causal=causal, window=window,
+                               softcap=softcap)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,K,S,hd,bs", [
+    (2, 4, 2, 512, 64, 128),
+    (1, 8, 8, 256, 64, 256),   # MHA
+    (2, 4, 1, 512, 128, 512),  # MQA, single block
+])
+def test_decode_attention_sweep(B, H, K, S, hd, bs, dtype):
+    q = rand((B, H, hd), dtype)
+    kc = rand((B, K, S, hd), dtype)
+    vc = rand((B, K, S, hd), dtype)
+    kpos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    qpos = jnp.full((B,), S - 1, jnp.int32)
+    out = ops.decode_attention(q, kc, vc, kpos, qpos, block_s=bs,
+                               interpret=True)
+    expect = ref.decode_attention_ref(q, kc, vc, kpos, qpos)
+    np.testing.assert_allclose(out.astype(np.float32),
+                               expect.astype(np.float32),
+                               atol=tol(dtype), rtol=tol(dtype))
+
+
+def test_decode_attention_ring_buffer_masking():
+    """Partially-filled ring cache: empty slots (pos −1) must not attend."""
+    B, H, K, S, hd = 1, 2, 2, 128, 64
+    q = rand((B, H, hd), jnp.float32)
+    kc = rand((B, K, S, hd), jnp.float32)
+    vc = rand((B, K, S, hd), jnp.float32)
+    kpos = jnp.where(jnp.arange(S) < 40, jnp.arange(S), -1)[None].astype(
+        jnp.int32)
+    qpos = jnp.full((B,), 39, jnp.int32)
+    out = ops.decode_attention(q, kc, vc, kpos, qpos, block_s=64,
+                               interpret=True)
+    expect = ref.decode_attention_ref(q, kc, vc, kpos, qpos)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+    # sliding window narrows further
+    out_w = ops.decode_attention(q, kc, vc, kpos, qpos, window=8,
+                                 block_s=64, interpret=True)
+    expect_w = ref.decode_attention_ref(q, kc, vc, kpos, qpos, window=8)
+    np.testing.assert_allclose(out_w, expect_w, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,H,hd,chunk", [
+    (1, 64, 2, 32, 16), (2, 128, 2, 64, 64), (1, 96, 1, 32, 32)])
+def test_wkv6_sweep(B, T, H, hd, chunk, dtype):
+    r = rand((B, T, H, hd), dtype)
+    k = rand((B, T, H, hd), dtype)
+    v = rand((B, T, H, hd), dtype)
+    w = (jax.nn.sigmoid(rand((B, T, H, hd), jnp.float32)) * 0.5
+         + 0.45).astype(dtype)
+    u = rand((H, hd), dtype)
+    y = ops.wkv6(r, k, v, w, u, chunk=chunk, interpret=True)
+    expect = ref.wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(y, expect, atol=max(tol(dtype), 1e-4),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_wkv6_matches_model_scan():
+    """Kernel must agree with the model's wkv_scan (zero init state)."""
+    from repro.models.rwkv6 import wkv_scan
+    B, T, H, hd = 2, 64, 2, 32
+    r = rand((B, T, H, hd), jnp.float32)
+    k = rand((B, T, H, hd), jnp.float32)
+    v = rand((B, T, H, hd), jnp.float32)
+    w = jax.nn.sigmoid(rand((B, T, H, hd), jnp.float32)) * 0.5 + 0.45
+    u = rand((H, hd), jnp.float32)
+    y_model, _ = wkv_scan(r, k, v, w, u,
+                          jnp.zeros((B, H, hd, hd), jnp.float32))
+    y_kernel = ops.wkv6(r, k, v, w, u, chunk=32, interpret=True)
+    np.testing.assert_allclose(y_kernel, y_model, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,R,chunk,br", [
+    (2, 128, 256, 64, 128), (1, 64, 512, 64, 512), (3, 96, 128, 32, 128)])
+def test_rglru_scan_sweep(B, T, R, chunk, br, dtype):
+    a = jax.nn.sigmoid(rand((B, T, R), jnp.float32)).astype(dtype)
+    x = rand((B, T, R), dtype)
+    h = ops.rglru_scan(a, x, chunk=chunk, block_r=br, interpret=True)
+    expect = ref.rglru_scan_ref(a, x)
+    np.testing.assert_allclose(h, expect, atol=max(tol(dtype), 1e-4),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_rglru_scan_with_initial_state():
+    B, T, R = 2, 64, 128
+    a = jax.nn.sigmoid(rand((B, T, R), jnp.float32))
+    x = rand((B, T, R), jnp.float32)
+    h0 = rand((B, R), jnp.float32)
+    h = ops.rglru_scan(a, x, h0, chunk=32, block_r=128, interpret=True)
+    expect = ref.rglru_scan_ref(a, x, h0)
+    np.testing.assert_allclose(h, expect, atol=1e-5, rtol=1e-5)

@@ -1,0 +1,120 @@
+"""Per-arch smoke tests (required): instantiate the REDUCED variant of each
+assigned architecture, run one forward/train step on CPU, assert output
+shapes + no NaNs; plus prefill->decode consistency vs the full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_tiny_config, get_config
+from repro.models import build_model
+from repro.training.optim import OptConfig
+from repro.training.train_step import init_train_state, make_train_step
+
+B, S = 2, 16
+
+
+def _batch(cfg, key, seq=S):
+    batch = {"tokens": jax.random.randint(key, (B, seq), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["media"] = (jax.random.normal(
+            key, (B, cfg.num_media_tokens, cfg.d_model)) * 0.02).astype(
+                jnp.dtype(cfg.dtype))
+    if cfg.family == "audio":
+        batch["frames"] = (jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model)) * 0.02).astype(
+                jnp.dtype(cfg.dtype))
+    return batch
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_config_limits(arch):
+    cfg = get_tiny_config(arch)
+    assert cfg.num_layers <= 6
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch, key):
+    cfg = get_tiny_config(arch)
+    model = build_model(cfg)
+    params = model.init(key)
+    logits, aux = model.logits(params, _batch(cfg, key), remat=False)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch, key):
+    cfg = get_tiny_config(arch)
+    model = build_model(cfg)
+    state = init_train_state(model, key, OptConfig(name=cfg.optimizer))
+    step = make_train_step(model, OptConfig(name=cfg.optimizer))
+    new_state, metrics = step(state, _batch(cfg, key))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually changed
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda p, q: float(jnp.sum(jnp.abs(
+            p.astype(jnp.float32) - q.astype(jnp.float32)))),
+            state["params"], new_state["params"]))
+    assert delta > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_forward(arch, key):
+    cfg = get_tiny_config(arch)
+    model = build_model(cfg)
+    params = model.init(key)
+    batch = _batch(cfg, key, seq=S + 1)
+    toks = batch["tokens"]
+    full, _ = model.logits(params, batch, remat=False)
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = toks[:, :S]
+    _, cache = model.prefill(params, pre_batch, cache_len=S + 4)
+    dec, _ = model.decode_step(params, toks[:, S:S + 1],
+                               jnp.full((B,), S, jnp.int32), cache)
+    a = np.asarray(full[:, S].astype(jnp.float32))
+    b = np.asarray(dec[:, 0].astype(jnp.float32))
+    rel = np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-9)
+    assert rel < 0.06, f"{arch}: decode/forward mismatch {rel:.4f}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_numbers(arch):
+    """Full configs expose the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "yi-9b": (48, 4096, 32, 4, 11008, 64000),
+        "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+        "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "rwkv6-1.6b": (24, 2048, 0, 0, 7168, 65536),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+    if arch == "arctic-480b":
+        assert (cfg.num_experts, cfg.num_experts_per_tok,
+                cfg.dense_residual) == (128, 2, True)
+    if arch == "llama4-maverick-400b-a17b":
+        assert (cfg.num_experts, cfg.num_experts_per_tok,
+                cfg.moe_layer_period) == (128, 1, 2)
+    if arch == "gemma2-9b":
+        assert cfg.sliding_window == 4096
+        assert cfg.attn_logit_softcap == 50.0
+    if arch == "recurrentgemma-2b":
+        assert cfg.attn_layer_period == 3 and cfg.sliding_window == 2048

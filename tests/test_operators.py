@@ -1,0 +1,152 @@
+import pytest
+
+from repro.core import operators as ops
+from repro.core.table import Table
+from repro.core.operators import TypecheckError
+
+
+def tbl(*rows):
+    return Table([("a", int), ("b", float)], rows)
+
+
+def test_map_schema_from_annotations():
+    def f(a: int, b: float) -> tuple[int, float]:
+        return a + 1, b * 2
+    m = ops.Map(f, names=["x", "y"])
+    out = m.apply([tbl((1, 2.0), (3, 4.0))])
+    assert out.columns == ["x", "y"]
+    assert out.to_dicts() == [{"x": 2, "y": 4.0}, {"x": 4, "y": 8.0}]
+
+
+def test_map_requires_return_annotation():
+    def f(a, b):
+        return a
+    with pytest.raises(TypecheckError):
+        ops.Map(f)
+
+
+def test_map_runtime_type_error():
+    def f(a: int, b: float) -> int:
+        return "oops"  # type: ignore
+    m = ops.Map(f)
+    with pytest.raises(TypecheckError):
+        m.apply([tbl((1, 2.0))])
+
+
+def test_map_deploy_time_arity_check():
+    def f(a: int) -> int:
+        return a
+    m = ops.Map(f)
+    with pytest.raises(TypecheckError):
+        m.out_schema([[("a", int), ("b", float)]])
+
+
+def test_filter_keeps_matching():
+    def f(a: int, b: float) -> bool:
+        return a > 1
+    out = ops.Filter(f).apply([tbl((1, 1.0), (2, 2.0), (3, 3.0))])
+    assert [r.values[0] for r in out.rows] == [2, 3]
+
+
+def test_filter_nonbool_raises():
+    def f(a: int, b: float) -> bool:
+        return 1  # type: ignore
+    with pytest.raises(TypecheckError):
+        ops.Filter(f).apply([tbl((1, 1.0))])
+
+
+def test_groupby_and_agg():
+    t = Table([("k", str), ("v", int)],
+              [("x", 1), ("x", 3), ("y", 5)])
+    g = ops.GroupBy("k").apply([t])
+    assert g.grouping == "k"
+    for fn, expect in [("count", {"x": 2, "y": 1}),
+                       ("sum", {"x": 4, "y": 5}),
+                       ("min", {"x": 1, "y": 5}),
+                       ("max", {"x": 3, "y": 5}),
+                       ("avg", {"x": 2.0, "y": 5.0})]:
+        out = ops.Agg(fn, "v").apply([g])
+        got = {r.values[0]: r.values[1] for r in out.rows}
+        assert got == expect, fn
+
+
+def test_agg_ungrouped_single_row():
+    t = Table([("k", str), ("v", int)], [("x", 1), ("y", 3)])
+    out = ops.Agg("sum", "v").apply([t])
+    assert len(out) == 1 and out.rows[0].values[1] == 4
+
+
+def test_agg_bad_fn():
+    with pytest.raises(TypecheckError):
+        ops.Agg("median", "v")
+
+
+def test_join_on_row_id():
+    left = Table([("a", int)])
+    right = Table([("b", str)])
+    r1 = left.insert((1,))
+    r2 = left.insert((2,))
+    right.insert(ops.Row(("x",), r1.row_id))
+    out = ops.Join().apply([left, right])
+    assert len(out) == 1
+    assert out.rows[0].values == (1, "x")
+
+
+def test_left_and_outer_join():
+    left = Table([("k", int), ("l", str)], [(1, "a"), (2, "b")])
+    right = Table([("k", int), ("r", str)], [(1, "x"), (3, "z")])
+    lj = ops.Join(key="k", how="left").apply([left, right])
+    assert len(lj) == 2
+    oj = ops.Join(key="k", how="outer").apply([left, right])
+    assert len(oj) == 3
+
+
+def test_join_rejects_grouped():
+    with pytest.raises(TypecheckError):
+        ops.Join().out_grouping(["k", None])
+
+
+def test_union_and_anyof():
+    a = tbl((1, 1.0))
+    b = tbl((2, 2.0))
+    u = ops.Union().apply([a, b])
+    assert len(u) == 2
+    any_ = ops.AnyOf().apply([None, b])
+    assert any_ is b
+
+
+def test_union_schema_mismatch():
+    with pytest.raises(TypecheckError):
+        ops.Union().out_schema([[("a", int)], [("a", str)]])
+
+
+def test_fuse_chain_semantics():
+    def f(a: int, b: float) -> tuple[int, float]:
+        return a * 2, b
+    def g(a: int, b: float) -> bool:
+        return a > 2
+    fuse = ops.Fuse([ops.Map(f, names=["a", "b"]), ops.Filter(g)])
+    out = fuse.apply([tbl((1, 0.0), (2, 0.0))])
+    assert [r.values[0] for r in out.rows] == [4]
+    assert fuse.out_schema([[("a", int), ("b", float)]]) == [
+        ("a", int), ("b", float)]
+
+
+class _Ctx:
+    def __init__(self, store):
+        self.kvs = store
+        self._store = store
+
+    def kvs_get(self, key):
+        return self._store[key]
+
+
+def test_lookup_constant_and_column():
+    t = Table([("key", str)], [("k1",), ("k2",)])
+    ctx = _Ctx({"k1": 10, "k2": 20, "c": 99})
+    out = ops.Lookup("key", is_column=True).apply([t], ctx)
+    assert [r.values[-1] for r in out.rows] == [10, 20]
+    out = ops.Lookup("c").apply([t], ctx)
+    assert [r.values[-1] for r in out.rows] == [99, 99]
+    with pytest.raises(RuntimeError):
+        ops.Lookup("c").apply([t], None)

@@ -1,0 +1,96 @@
+"""Cost-based automatic optimization selection (paper §7, implemented)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.dataflow import Dataflow
+from repro.core.planner import auto_deploy, make_plan, profile_flow
+from repro.core.table import Table
+from repro.runtime.netmodel import NetModel
+from repro.runtime.runtime import Runtime
+
+
+def _cheap_chain(payload_kb=256, n=4):
+    def ident(x: np.ndarray) -> np.ndarray:
+        return x
+    fl = Dataflow([("x", np.ndarray)])
+    node = fl.source
+    for _ in range(n):
+        node = node.map(ident, names=["x"])
+    fl.output = node
+    sample = Table([("x", np.ndarray)],
+                   [(np.zeros(payload_kb * 128, np.float64),)])
+    return fl, sample
+
+
+def test_profile_collects_stats():
+    fl, sample = _cheap_chain()
+    profiles = profile_flow(fl, sample, runs=3)
+    assert len(profiles) == 4
+    for p in profiles.values():
+        assert p.out_bytes > 0 and p.runs == 3
+
+
+def test_planner_fuses_hop_dominated_chain():
+    fl, sample = _cheap_chain(payload_kb=1024)
+    plan = make_plan(fl, sample, net=NetModel())
+    assert plan.fusion, plan.notes
+
+
+def test_planner_keeps_compute_heavy_ops_separate():
+    def heavy(x: np.ndarray) -> np.ndarray:
+        time.sleep(0.05)   # compute >> hop cost
+        return x
+    fl = Dataflow([("x", np.ndarray)])
+    node = fl.source
+    for _ in range(3):
+        node = node.map(heavy, names=["x"])
+    fl.output = node
+    sample = Table([("x", np.ndarray)], [(np.zeros(16),)])
+    plan = make_plan(fl, sample, net=NetModel(), runs=2)
+    assert not plan.fusion, plan.notes  # autoscaling granularity preserved
+
+
+def test_planner_flags_high_variance():
+    import random
+    rng = random.Random(0)
+
+    def jittery(x: int) -> int:
+        time.sleep(rng.choice([0.001, 0.001, 0.05]))
+        return x
+    fl = Dataflow([("x", int)])
+    fl.output = fl.map(jittery, names=["x"])
+    sample = Table([("x", int)], [(1,)])
+    plan = make_plan(fl, sample, runs=9)
+    assert plan.competitive_exec, plan.notes
+    assert plan.replicas
+
+
+def test_planner_enables_locality_for_big_lookups():
+    def use(key: str, lookup) -> float:
+        return float(np.sum(lookup))
+    fl = Dataflow([("key", str)])
+    fl.output = fl.lookup("key", column=True).map(use, names=["s"])
+    rt = Runtime(n_cpu=2, net=NetModel(scale=0.0))
+    try:
+        rt.kvs.put("big", np.zeros(1 << 17), charge=False)  # 1 MB
+        sample = Table([("key", str)], [("big",)])
+        deployed, plan = auto_deploy(fl, rt, sample, runs=2)
+        assert plan.locality, plan.notes
+        out = deployed.execute(sample).result(timeout=10)
+        assert out.rows[0].values[-1] == 0.0
+    finally:
+        rt.stop()
+
+
+def test_auto_deploy_end_to_end_matches_local():
+    fl, sample = _cheap_chain(payload_kb=64)
+    expected = fl.execute_local(sample).to_dicts()
+    rt = Runtime(n_cpu=2, net=NetModel(scale=0.0))
+    try:
+        deployed, plan = auto_deploy(fl, rt, sample, runs=2)
+        got = deployed.execute(sample).result(timeout=10).to_dicts()
+        assert len(got) == len(expected)
+    finally:
+        rt.stop()

@@ -1,0 +1,114 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import operators as ops
+from repro.core.dataflow import Dataflow
+from repro.core.rewrites import fuse_chains
+from repro.core.table import Table
+from repro.serving.batcher import Batcher
+
+ints = st.integers(-1000, 1000)
+rows = st.lists(st.tuples(ints, ints), min_size=0, max_size=30)
+
+
+def _t(data):
+    return Table([("a", int), ("b", int)], data)
+
+
+@given(rows, st.integers(1, 6))
+@settings(max_examples=40, deadline=None)
+def test_fusion_equivalence_on_random_chains(data, n):
+    """Operator fusion must preserve semantics for any map/filter chain."""
+    def inc(a: int, b: int) -> tuple[int, int]:
+        return a + 1, b
+    def flip(a: int, b: int) -> tuple[int, int]:
+        return b, a
+    def keep(a: int, b: int) -> bool:
+        return (a + b) % 3 != 0
+    fns = [(inc, "map"), (flip, "map"), (keep, "filter")]
+    fl = Dataflow([("a", int), ("b", int)])
+    node = fl.source
+    for i in range(n):
+        fn, kind = fns[i % 3]
+        node = (node.map(fn, names=["a", "b"]) if kind == "map"
+                else node.filter(fn))
+    fl.output = node
+    base = fl.execute_local(_t(data)).to_dicts()
+    fused = fuse_chains(fl).execute_local(_t(data)).to_dicts()
+    assert base == fused
+
+
+@given(rows)
+@settings(max_examples=40, deadline=None)
+def test_agg_matches_python(data):
+    t = _t(data)
+    if not data:
+        return
+    for fn, pyfn in [("sum", sum), ("min", min), ("max", max),
+                     ("count", len)]:
+        out = ops.Agg(fn, "a").apply([t])
+        vals = [r[0] for r in data]
+        assert out.rows[0].values[1] == pyfn(vals)
+    avg = ops.Agg("avg", "a").apply([t]).rows[0].values[1]
+    assert math.isclose(avg, sum(r[0] for r in data) / len(data))
+
+
+@given(rows, rows)
+@settings(max_examples=40, deadline=None)
+def test_join_counts(left_data, right_data):
+    """inner <= left <= outer; left join preserves all left rows."""
+    left = Table([("k", int), ("l", int)], left_data)
+    right = Table([("k", int), ("r", int)], right_data)
+    inner = ops.Join(key="k").apply([left, right])
+    leftj = ops.Join(key="k", how="left").apply([left, right])
+    outer = ops.Join(key="k", how="outer").apply([left, right])
+    assert len(inner) <= len(leftj) <= len(outer)
+    lkeys = {r[0] for r in left_data}
+    rkeys = {r[0] for r in right_data}
+    matched_left = sum(1 for r in left_data if r[0] in rkeys)
+    unmatched_left = len(left_data) - matched_left
+    assert len(leftj) == len(inner) + unmatched_left
+    unmatched_right = sum(1 for r in right_data if r[0] not in lkeys)
+    assert len(outer) == len(leftj) + unmatched_right
+
+
+@given(rows)
+@settings(max_examples=30, deadline=None)
+def test_union_multiset(data):
+    a = _t(data)
+    b = _t(data[::-1])
+    u = ops.Union().apply([a, b])
+    assert len(u) == 2 * len(data)
+    assert sorted(r.values for r in u.rows) == sorted(
+        [tuple(v) for v in data] * 2)
+
+
+@given(st.lists(ints, min_size=1, max_size=40), st.integers(1, 10))
+@settings(max_examples=20, deadline=None)
+def test_batcher_matches_sequential(xs, max_batch):
+    """Batched execution demultiplexes to exactly the sequential results."""
+    def fn(args):
+        return [a * 2 + 1 for a in args]
+    b = Batcher(fn, max_batch=max_batch, max_wait_ms=1.0)
+    try:
+        import concurrent.futures as cf
+        with cf.ThreadPoolExecutor(8) as pool:
+            futs = [pool.submit(b.call, x) for x in xs]
+            got = [f.result(timeout=10) for f in futs]
+        assert got == [x * 2 + 1 for x in xs]
+    finally:
+        b.close()
+
+
+@given(st.lists(st.tuples(st.sampled_from("abcdef"), ints), min_size=1,
+                max_size=50))
+@settings(max_examples=30, deadline=None)
+def test_groupby_agg_partition(data):
+    """Sum over groups == total sum (aggregation is a partition)."""
+    t = Table([("k", str), ("v", int)], data)
+    g = ops.GroupBy("k").apply([t])
+    out = ops.Agg("sum", "v").apply([g])
+    assert sum(r.values[1] for r in out.rows) == sum(v for _, v in data)

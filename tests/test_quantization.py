@@ -1,0 +1,81 @@
+"""Beyond-paper serving quantization: int8 KV cache + int8 expert weights."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_tiny_config
+from repro.models import build_model
+from repro.models import layers
+from repro.models import moe as moe_lib
+
+
+def test_kv_quant_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 2, 32)) * 3.0
+    q, s = layers.kv_quantize(x)
+    assert q.dtype == jnp.int8 and s.shape == (4, 8, 2)
+    back = layers.kv_dequantize(q, s, jnp.float32)
+    err = float(jnp.max(jnp.abs(back - x)) / jnp.max(jnp.abs(x)))
+    assert err < 0.01
+
+
+def test_kv_quant_decode_consistency():
+    cfg = dataclasses.replace(get_tiny_config("yi-9b"), kv_quant=True)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                              cfg.vocab_size)
+    full, _ = m.logits(params, {"tokens": toks}, remat=False)
+    _, cache = m.prefill(params, {"tokens": toks[:, :S]}, cache_len=S + 4)
+    assert cache["k0"].dtype == jnp.int8
+    dec, _ = m.decode_step(params, toks[:, S:S + 1],
+                           jnp.full((B,), S, jnp.int32), cache)
+    a = np.asarray(full[:, S].astype(jnp.float32))
+    b = np.asarray(dec[:, 0].astype(jnp.float32))
+    rel = np.max(np.abs(a - b)) / np.max(np.abs(a))
+    assert rel < 0.08, rel
+
+
+def test_expert_quant_weights_shapes():
+    cfg = get_tiny_config("arctic-480b")
+    p = moe_lib.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32, 2)
+    q = moe_lib.quantize_expert_weights(p)
+    assert q["w_up"]["q"].dtype == jnp.int8
+    assert q["w_up"]["q"].shape == p["w_up"].shape
+    assert q["w_up"]["s"].shape == p["w_up"].shape[:-2] + p[
+        "w_up"].shape[-1:]
+    # dequant error small
+    back = moe_lib._maybe_dequant(q["w_up"], jnp.float32)
+    err = float(jnp.max(jnp.abs(back - p["w_up"]))
+                / jnp.max(jnp.abs(p["w_up"])))
+    assert err < 0.02
+
+
+def test_expert_quant_logits_close_to_float():
+    cfg_f = get_tiny_config("llama4-maverick-400b-a17b")
+    cfg_q = dataclasses.replace(cfg_f, expert_quant=True)
+    key = jax.random.PRNGKey(0)
+    mf, mq = build_model(cfg_f), build_model(cfg_q)
+    pf, pq = mf.init(key), mq.init(key)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg_f.vocab_size)}
+    lf, _ = mf.logits(pf, batch, remat=False)
+    lq, _ = mq.logits(pq, batch, remat=False)
+    rel = float(jnp.max(jnp.abs(lf.astype(jnp.float32)
+                                - lq.astype(jnp.float32)))
+                / jnp.max(jnp.abs(lf.astype(jnp.float32))))
+    assert rel < 0.1, rel
+
+
+def test_expert_quant_decode_runs():
+    cfg = dataclasses.replace(get_tiny_config("arctic-480b"),
+                              expert_quant=True, kv_quant=True)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jnp.ones((2, 8), jnp.int32)
+    _, cache = m.prefill(params, {"tokens": toks}, cache_len=16)
+    logits, cache = m.decode_step(params, toks[:, :1],
+                                  jnp.full((2,), 8, jnp.int32), cache)
+    assert bool(jnp.all(jnp.isfinite(logits)))

@@ -1,0 +1,99 @@
+from repro.core import operators as ops
+from repro.core.dataflow import Dataflow
+from repro.core.rewrites import (apply_rewrites, competitive, fuse_chains,
+                                 fuse_lookups)
+from repro.core.table import Table
+
+
+def _chain_flow(n: int = 4):
+    def inc(x: int) -> int:
+        return x + 1
+    fl = Dataflow([("x", int)])
+    node = fl.source
+    for _ in range(n):
+        node = node.map(inc, names=["x"])
+    fl.output = node
+    return fl
+
+
+def _op_nodes(flow):
+    return [n for n in flow.sorted_nodes() if n.op is not None]
+
+
+def test_fusion_collapses_chain():
+    fl = _chain_flow(5)
+    fused = fuse_chains(fl)
+    nodes = _op_nodes(fused)
+    assert len(nodes) == 1
+    assert isinstance(nodes[0].op, ops.Fuse)
+    assert len(nodes[0].op.ops) == 5
+
+
+def test_fusion_preserves_semantics():
+    fl = _chain_flow(5)
+    t = Table([("x", int)], [(0,), (10,)])
+    base = fl.execute_local(t)
+    fused = fuse_chains(fl)
+    out = fused.execute_local(t)
+    assert out.to_dicts() == base.to_dicts()
+
+
+def test_fusion_stops_at_fanout():
+    def inc(x: int) -> int:
+        return x + 1
+    fl = Dataflow([("x", int)])
+    a = fl.map(inc, names=["x"])
+    b = a.map(inc, names=["x"])
+    c = a.map(inc, names=["x"])       # a has two consumers
+    fl.output = b.union(c)
+    fused = fuse_chains(fl)
+    kinds = [type(n.op).__name__ for n in _op_nodes(fused)]
+    assert "Union" in kinds
+    assert len(_op_nodes(fused)) == 4  # a, b, c, union — nothing collapsed
+
+
+def test_fusion_respects_resource_class():
+    def inc(x: int) -> int:
+        return x + 1
+    fl = Dataflow([("x", int)])
+    a = fl.map(inc, names=["x"])                 # cpu
+    b = a.map(inc, names=["x"], gpu=True)        # gpu
+    fl.output = b
+    fused = fuse_chains(fl)
+    assert len(_op_nodes(fused)) == 2
+
+
+def test_competitive_adds_replicas_and_anyof():
+    import time, random
+    def model(x: int) -> int:
+        return x
+    fl = Dataflow([("x", int)])
+    fl.output = fl.map(model, names=["x"], competitive_replicas=3)
+    rw = competitive(fl)
+    nodes = _op_nodes(rw)
+    anyofs = [n for n in nodes if isinstance(n.op, ops.AnyOf)]
+    maps = [n for n in nodes if isinstance(n.op, ops.Map)]
+    assert len(anyofs) == 1 and len(maps) == 3
+    assert len(anyofs[0].upstreams) == 3
+    out = rw.execute_local(Table([("x", int)], [(7,)]))
+    assert out.rows[0].values == (7,)
+
+
+def test_lookup_fusion():
+    def use(key: str, lookup) -> int:
+        return int(lookup)
+    fl = Dataflow([("key", str)])
+    lk = fl.lookup("key", column=True)
+    fl.output = lk.map(use, names=["v"])
+    rw = fuse_lookups(fl)
+    nodes = _op_nodes(rw)
+    assert len(nodes) == 1
+    assert isinstance(nodes[0].op, ops.Fuse)
+    assert isinstance(nodes[0].op.ops[0], ops.Lookup)
+
+
+def test_apply_rewrites_typechecks():
+    fl = _chain_flow(3)
+    out = apply_rewrites(fl, fusion=True, competitive_exec=True,
+                         locality=True)
+    assert len(_op_nodes(out)) == 1

@@ -1,0 +1,89 @@
+import textwrap
+
+import pytest
+
+from repro.configs import get_config, SHAPES
+from repro.roofline import analysis, flops, hw
+
+
+def test_shape_bytes():
+    assert analysis._shape_bytes("bf16[8,64]") == 8 * 64 * 2
+    assert analysis._shape_bytes("f32[2,3,4]") == 96
+    assert analysis._shape_bytes("(bf16[8], f32[4])") == 16 + 16
+    assert analysis._shape_bytes("pred[16]") == 16
+
+
+def test_collective_parse_simple():
+    hlo = textwrap.dedent("""
+    ENTRY %main (a: bf16[8]) -> bf16[8] {
+      %x = bf16[8,64]{1,0} all-gather(%a), dimensions={1}
+      %y = f32[16]{0} all-reduce(%x), to_apply=%add
+      ROOT %r = bf16[8]{0} copy(%y)
+    }
+    """)
+    out = analysis.collective_bytes(hlo)
+    assert out["all-gather"] == 8 * 64 * 2
+    assert out["all-reduce"] == 64
+
+
+def test_collective_trip_count_multiplier():
+    hlo = textwrap.dedent("""
+    %body (p: (s32[], bf16[8])) -> (s32[], bf16[8]) {
+      %g = bf16[8,4]{1,0} all-gather(%p), dimensions={1}
+      ROOT %t = (s32[], bf16[8]) tuple(%g)
+    }
+
+    %cond (p: (s32[], bf16[8])) -> pred[] {
+      %limit = s32[] constant(24)
+      ROOT %c = pred[] compare(%p, %limit), direction=LT
+    }
+
+    ENTRY %main (a: bf16[8]) -> bf16[8] {
+      %w = (s32[], bf16[8]) while(%a), condition=%cond, body=%body
+      %top = bf16[16]{0} all-reduce(%w), to_apply=%add
+      ROOT %r = bf16[8]{0} copy(%w)
+    }
+    """)
+    out = analysis.collective_bytes_corrected(hlo)
+    assert out["all-gather"] == 24 * 8 * 4 * 2
+    assert out["all-reduce"] == 32
+
+
+def test_roofline_terms_and_bottleneck():
+    r = analysis.Roofline(flops=197e12, hbm_bytes=819e9, coll_bytes=0,
+                          model_flops=197e12, chips=1)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(1.0)
+    assert r.bottleneck in ("compute", "memory")
+    r2 = analysis.Roofline(flops=1, hbm_bytes=1, coll_bytes=200e9 * 4)
+    assert r2.bottleneck == "collective"
+
+
+@pytest.mark.parametrize("arch,shape,expect_ratio_range", [
+    ("yi-9b", "train_4k", (0.2, 1.0)),
+    ("yi-9b", "decode_32k", (0.3, 1.05)),
+    ("arctic-480b", "train_4k", (0.1, 1.0)),
+    ("rwkv6-1.6b", "decode_32k", (0.5, 1.2)),
+])
+def test_analytic_estimator_sanity(arch, shape, expect_ratio_range):
+    """Useful ratio = MODEL_FLOPS / executed must be in a sane band —
+    executed >= useful (up to small approximation slack)."""
+    cfg = get_config(arch)
+    est = flops.estimate(cfg, SHAPES[shape], chips=256, mp=16)
+    ratio = est.model_flops / est.step_flops
+    lo, hi = expect_ratio_range
+    assert lo <= ratio <= hi, (arch, shape, ratio)
+
+
+def test_train_flops_dominated_by_backprop():
+    cfg = get_config("yi-9b")
+    tr = flops.estimate(cfg, SHAPES["train_4k"], chips=256, mp=16)
+    assert tr.step_flops >= 3 * tr.fwd_flops
+
+
+def test_decode_memory_bound():
+    cfg = get_config("granite-34b")
+    est = flops.estimate(cfg, SHAPES["decode_32k"], chips=256, mp=16)
+    t_c = est.step_flops / 256 / hw.PEAK_FLOPS_BF16
+    t_m = est.hbm_bytes_per_chip / hw.HBM_BW
+    assert t_m > t_c  # decode is memory-bound on v5e

@@ -1,0 +1,142 @@
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.dataflow import Dataflow
+from repro.core.table import Table
+from repro.runtime.autoscaler import Autoscaler, AutoscalerConfig
+from repro.runtime.kvs import KVS, CacheClient
+from repro.runtime.netmodel import NetModel, nbytes
+from repro.runtime.runtime import Runtime
+
+
+@pytest.fixture
+def rt():
+    r = Runtime(n_cpu=4, net=NetModel(scale=0.0))
+    yield r
+    r.stop()
+
+
+def test_runtime_matches_local(rt):
+    def pre(x: int) -> float:
+        return float(x)
+    def m1(v: float) -> tuple[str, float]:
+        return "m1", v + 0.1
+    def m2(v: float) -> tuple[str, float]:
+        return "m2", v + 0.5
+    fl = Dataflow([("x", int)])
+    base = fl.map(pre, names=["v"])
+    fl.output = base.map(m1, names=["l", "c"]).union(
+        base.map(m2, names=["l", "c"])).agg("max", "c")
+    t = Table([("x", int)], [(1,), (2,)])
+    local = fl.execute_local(t).to_dicts()
+    fl.deploy(rt, fusion=True)
+    assert fl.execute(t).result(timeout=10).to_dicts() == local
+
+
+def test_wait_for_any_returns_first(rt):
+    def fast(x: int) -> int:
+        return x
+    def slow(x: int) -> int:
+        time.sleep(0.5)
+        return -x
+    fl = Dataflow([("x", int)])
+    a = fl.map(fast, names=["x"])
+    b = fl.map(slow, names=["x"])
+    fl.output = a.anyof(b)
+    fl.deploy(rt)
+    t0 = time.perf_counter()
+    out = fl.execute(Table([("x", int)], [(5,)])).result(timeout=10)
+    assert out.rows[0].values == (5,)
+    assert time.perf_counter() - t0 < 0.4  # did not wait for slow branch
+
+
+def test_batching_demux(rt):
+    calls = []
+    def model(x: int) -> int:
+        calls.append(1)
+        return x * 10
+    fl = Dataflow([("x", int)])
+    fl.output = fl.map(model, names=["y"], batching=True)
+    fl.deploy(rt)
+    futs = [fl.execute(Table([("x", int)], [(i,)])) for i in range(8)]
+    outs = [f.result(timeout=10).rows[0].values[0] for f in futs]
+    assert outs == [i * 10 for i in range(8)]
+    batcher = rt._batchers[next(iter(rt._batchers))]
+    assert max(batcher.batch_sizes) > 1  # actually batched across requests
+
+
+def test_lookup_through_runtime(rt):
+    rt.kvs.put("w", 42, charge=False)
+    def use(key: str, lookup) -> int:
+        return int(lookup)
+    fl = Dataflow([("key", str)])
+    fl.output = fl.lookup("key", column=True).map(use, names=["v"])
+    fl.deploy(rt, locality=True)
+    out = fl.execute(Table([("key", str)], [("w",)])).result(timeout=10)
+    assert out.rows[0].values == (42,)
+
+
+def test_locality_scheduler_prefers_cached_executor():
+    rt = Runtime(n_cpu=4, net=NetModel(scale=0.0))
+    try:
+        rt.kvs.put("hot", np.zeros(1000), charge=False)
+        ex = rt.pool.by_class("cpu")[2]
+        ex.cache.get("hot")  # warm exactly one executor
+        def use(key: str, lookup) -> int:
+            return 1
+        fl = Dataflow([("key", str)])
+        fl.output = fl.lookup("key", column=True).map(use, names=["v"])
+        fl.deploy(rt, locality=True)
+        for _ in range(6):
+            fl.execute(Table([("key", str)],
+                             [("hot",)])).result(timeout=10)
+        # all lookups after the first should be cache hits on that executor
+        assert ex.cache.hits >= 5
+    finally:
+        rt.stop()
+
+
+def test_kvs_cache_eviction_and_index():
+    kvs = KVS(NetModel(scale=0.0))
+    cache = CacheClient(kvs, "e1", capacity_bytes=2000)
+    kvs.put("a", np.zeros(150), charge=False)   # 1200 B
+    kvs.put("b", np.zeros(150), charge=False)
+    cache.get("a")
+    assert "e1" in kvs.cached_where("a")
+    cache.get("b")                              # evicts a
+    assert not cache.holds("a")
+    assert "e1" not in kvs.cached_where("a")
+    assert cache.holds("b")
+
+
+def test_nbytes_estimates():
+    assert nbytes(np.zeros(10, np.float64)) == 80
+    assert nbytes("abcd") == 4
+    assert nbytes([np.zeros(2, np.float32), "ab"]) == 10
+    t = Table([("a", int)], [(1,), (2,)])
+    assert nbytes(t) > 0
+
+
+def test_autoscaler_scales_up_under_load():
+    rt = Runtime(n_cpu=1, net=NetModel(scale=0.0))
+    try:
+        def slow(x: int) -> int:
+            time.sleep(0.05)
+            return x
+        fl = Dataflow([("x", int)])
+        fl.output = fl.map(slow, names=["x"])
+        dep = fl.deploy(rt)
+        fname = dep.function_names[0]
+        # pin the function to one executor, then autoscale
+        rt.pool.assign(fname, [rt.pool.by_class("cpu")[0].id])
+        scaler = Autoscaler(rt.pool, {fname: "cpu"},
+                            AutoscalerConfig(interval_s=0.05)).start()
+        futs = [fl.execute(Table([("x", int)], [(i,)])) for i in range(40)]
+        for f in futs:
+            f.result(timeout=30)
+        scaler.stop()
+        assert rt.pool.replica_count(fname) > 1
+    finally:
+        rt.stop()

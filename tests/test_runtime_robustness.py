@@ -1,0 +1,99 @@
+"""Runtime failure handling + additional property coverage."""
+import time
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.dataflow import Dataflow
+from repro.core.table import Table
+from repro.models import layers
+from repro.runtime.netmodel import NetModel
+from repro.runtime.runtime import Runtime
+
+
+def test_operator_exception_propagates_to_future():
+    def boom(x: int) -> int:
+        raise ValueError("kaboom")
+    fl = Dataflow([("x", int)])
+    fl.output = fl.map(boom, names=["x"])
+    rt = Runtime(n_cpu=2, net=NetModel(scale=0.0))
+    try:
+        fl.deploy(rt)
+        fut = fl.execute(Table([("x", int)], [(1,)]))
+        with pytest.raises(ValueError, match="kaboom"):
+            fut.result(timeout=10)
+    finally:
+        rt.stop()
+
+
+def test_runtime_type_error_propagates():
+    def lies(x: int) -> int:
+        return "not an int"  # type: ignore
+    fl = Dataflow([("x", int)])
+    fl.output = fl.map(lies, names=["x"])
+    rt = Runtime(n_cpu=2, net=NetModel(scale=0.0))
+    try:
+        fl.deploy(rt)
+        from repro.core.operators import TypecheckError
+        with pytest.raises(TypecheckError):
+            fl.execute(Table([("x", int)], [(1,)])).result(timeout=10)
+    finally:
+        rt.stop()
+
+
+def test_concurrent_requests_isolated():
+    """Many in-flight requests must not cross-contaminate results."""
+    def double(x: int) -> int:
+        time.sleep(0.002)
+        return x * 2
+    fl = Dataflow([("x", int)])
+    fl.output = fl.map(double, names=["x"]).map(double, names=["x"])
+    rt = Runtime(n_cpu=4, net=NetModel(scale=0.0))
+    try:
+        fl.deploy(rt, fusion=False)   # separate stages, shared executors
+        futs = [(i, fl.execute(Table([("x", int)], [(i,)])))
+                for i in range(24)]
+        for i, f in futs:
+            assert f.result(timeout=20).rows[0].values[0] == 4 * i
+    finally:
+        rt.stop()
+
+
+@given(st.integers(2, 64), st.integers(1, 4), st.integers(1, 4))
+@settings(max_examples=12, deadline=None)
+def test_triangle_attention_property(chunks, heads, kv_heads):
+    """Triangle-pair attention equals full chunked attention for any
+    chunk count / GQA grouping (hypothesis sweep)."""
+    if heads % kv_heads:
+        heads = kv_heads * max(1, heads // kv_heads)
+    c = 8
+    S = chunks * c
+    if S > 256:
+        S, chunks = 256, 256 // c
+    key = jax.random.PRNGKey(chunks * 131 + heads)
+    q = jax.random.normal(key, (1, S, heads, 16)) * 0.5
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, S, kv_heads, 16)) * 0.5
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, S, kv_heads, 16)) * 0.5
+    pos = jnp.arange(S, dtype=jnp.int32)
+    a = layers.chunked_attention(q, k, v, q_positions=pos, k_positions=pos,
+                                 causal=True, chunk_q=c, chunk_k=c)
+    b = layers.chunked_attention_causal_skip(q, k, v, q_positions=pos,
+                                             k_positions=pos, chunk=c)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1,
+                max_size=64))
+@settings(max_examples=25, deadline=None)
+def test_kv_quantization_bounded_error(vals):
+    """int8 KV quantization error is bounded by scale/2 per element."""
+    x = jnp.asarray(vals, jnp.float32).reshape(1, -1)
+    q, s = layers.kv_quantize(x)
+    back = layers.kv_dequantize(q, s, jnp.float32)
+    err = np.max(np.abs(np.asarray(back - x)))
+    bound = float(np.max(np.asarray(s))) * 0.51 + 1e-6
+    assert err <= bound

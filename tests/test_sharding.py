@@ -1,0 +1,90 @@
+"""Sharding spec rules: structure matches params; dims are divisible on the
+production mesh axes (the dry-run exercises real lowering; these are fast
+structural checks)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P, Mesh
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import sharding as sh
+from repro.models import build_model
+from repro.models.partition import AxisInfo
+
+MP = 16
+DP = 16
+
+
+class _FakeMesh:
+    """Shape-only stand-in (no devices needed for spec math)."""
+    shape = {"data": DP, "model": MP}
+    axis_names = ("data", "model")
+
+
+def _abstract_params(arch):
+    cfg = get_config(arch)
+    ax = AxisInfo(mesh=_FakeMesh(), data=("data",), model="model")
+    model = build_model(cfg, ax)
+    return cfg, ax, jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_cover_and_divide(arch):
+    cfg, ax, params = _abstract_params(arch)
+    specs = sh.param_pspecs(params, cfg, ax, mode="train")
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    axis_size = {"data": DP, "model": MP, "pod": 2}
+    for p, s in zip(flat_p, flat_s):
+        assert isinstance(s, P)
+        assert len(s) <= p.ndim, (p.shape, s)
+        for dim, names in zip(p.shape, s):
+            if names is None:
+                continue
+            names = names if isinstance(names, tuple) else (names,)
+            total = 1
+            for n in names:
+                total *= axis_size[n]
+            assert dim % total == 0, (arch, p.shape, s)
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "arctic-480b", "rwkv6-1.6b"])
+def test_big_leaves_are_fully_sharded_for_train(arch):
+    """ZeRO goal: every >=100M-param leaf must shard over both axes."""
+    cfg, ax, params = _abstract_params(arch)
+    specs = sh.param_pspecs(params, cfg, ax, mode="train")
+    flat = jax.tree.flatten_with_path(params)[0]
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    for (path, p), s in zip(flat, flat_s):
+        if p.size < 100e6:
+            continue
+        used = {n for names in s if names
+                for n in (names if isinstance(names, tuple) else (names,))}
+        assert "model" in used and "data" in used, (
+            jax.tree_util.keystr(path), p.shape, s)
+
+
+def test_opt_state_specs_adafactor():
+    cfg, ax, params = _abstract_params("arctic-480b")
+    pspecs = sh.param_pspecs(params, cfg, ax, mode="train")
+    ospecs = sh.opt_state_pspecs(params, pspecs, "adafactor")
+    from repro.training import optim
+    ostate = jax.eval_shape(lambda: optim.adafactor_init(
+        jax.tree.map(lambda t: jnp.zeros(t.shape, t.dtype), params)))
+    # structure must line up leaf-for-leaf
+    jax.tree.map(lambda a, b: None, ostate["v"], ospecs["v"],
+                 is_leaf=lambda x: isinstance(x, (P, jax.ShapeDtypeStruct)))
+
+
+def test_batch_pspecs_long_500k_unsharded():
+    from repro.configs.shapes import LONG_500K, DECODE_32K
+    cfg = get_config("rwkv6-1.6b")
+    ax = AxisInfo(mesh=_FakeMesh(), data=("data",), model="model",
+                  shard_batch=False)
+    specs = sh.batch_pspecs(cfg, ax, LONG_500K)
+    assert specs["tokens"] == P(None, None)
+    ax2 = AxisInfo(mesh=_FakeMesh(), data=("data",), model="model")
+    specs2 = sh.batch_pspecs(cfg, ax2, DECODE_32K)
+    assert specs2["tokens"] == P(("data",), None) or specs2["tokens"] == P(
+        "data", None)

@@ -1,0 +1,53 @@
+import pytest
+
+from repro.core.table import Table, Row, schema_compatible
+
+
+def test_insert_and_columns():
+    t = Table([("a", int), ("b", str)])
+    t.insert((1, "x"))
+    t.insert((2, "y"))
+    assert len(t) == 2
+    assert t.columns == ["a", "b"]
+    assert t.column("a") == [1, 2]
+    assert t.column_index("b") == 1
+
+
+def test_row_ids_unique_and_persistent():
+    t = Table([("a", int)], [(1,), (2,), (3,)])
+    ids = [r.row_id for r in t.rows]
+    assert len(set(ids)) == 3
+    r2 = t.rows[0].replace((99,))
+    assert r2.row_id == t.rows[0].row_id
+    assert r2.values == (99,)
+
+
+def test_arity_mismatch():
+    t = Table([("a", int), ("b", int)])
+    with pytest.raises(ValueError):
+        t.insert((1,))
+
+
+def test_scalar_insert():
+    t = Table([("a", int)])
+    t.insert(5)
+    assert t.rows[0].values == (5,)
+
+
+def test_with_rows_preserves_schema_changes_grouping():
+    t = Table([("a", int)], [(1,)], grouping=None)
+    t2 = t.with_rows(t.rows, grouping="a")
+    assert t2.grouping == "a"
+    assert t2.schema == t.schema
+
+
+def test_dict_roundtrip():
+    t = Table.from_dicts([("a", int), ("b", str)],
+                         [{"a": 1, "b": "x"}, {"a": 2, "b": "y"}])
+    assert t.to_dicts() == [{"a": 1, "b": "x"}, {"a": 2, "b": "y"}]
+
+
+def test_schema_compat():
+    assert schema_compatible([("a", int)], [("z", int)])
+    assert not schema_compatible([("a", int)], [("a", str)])
+    assert not schema_compatible([("a", int)], [("a", int), ("b", int)])
