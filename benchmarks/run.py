@@ -12,8 +12,8 @@ import argparse
 import sys
 import time
 
-SUITES = ("fusion", "competitive", "autoscaling", "locality", "batching",
-          "pipelines", "roofline")
+SUITES = ("fusion", "jit_fusion", "competitive", "autoscaling", "locality",
+          "batching", "pipelines", "roofline")
 
 
 def main() -> None:
@@ -37,6 +37,9 @@ def main() -> None:
     if "fusion" in only:
         from benchmarks import fusion_chain
         emit(fusion_chain.run(n_requests=6 if args.fast else 12))
+    if "jit_fusion" in only:
+        from benchmarks import fusion_chain
+        emit(fusion_chain.run_jit(n_requests=10 if args.fast else 30))
     if "competitive" in only:
         from benchmarks import competitive
         emit(competitive.run(n_requests=15 if args.fast else 40))

@@ -1,2 +1,4 @@
 from repro.core.dataflow import Dataflow  # noqa: F401
+from repro.core.ir import PhysicalOp, PhysicalPlan  # noqa: F401
+from repro.core.passes import PassPipeline, build_pipeline  # noqa: F401
 from repro.core.table import Table, Row  # noqa: F401

@@ -1,87 +1,70 @@
-"""Dataflow-to-FaaS compilation (paper §4).
+"""Dataflow-to-FaaS compilation (paper §4), as an explicit pipeline:
 
-Maps a (rewritten) Cloudflow DAG onto a runtime DAG of functions:
+    logical ``Dataflow``
+      -> ``PhysicalPlan`` IR        (``PhysicalPlan.from_dataflow``)
+      -> optimization passes        (``repro.core.passes.PassPipeline``)
+      -> runtime DAG                (``RuntimeDag.from_plan``)
 
-* each operator (or fused chain) becomes one runtime function;
-* ``anyof`` nodes get *wait-for-any* semantics;
-* fused ``lookup`` chains get the *to-be-continued* dynamic-dispatch
-  treatment: executor choice for the continuation is deferred until the
-  upstream half has produced the resolved ref, and the scheduler then
-  prefers an executor caching that ref.  (The paper splits into two
-  Cloudburst DAGs + a scheduler callback; our scheduler defers placement of
-  the single node until its inputs exist, which is the same decision point.)
+The pass pipeline carries the paper's rewrites (fusion, competitive
+execution, locality) plus XLA lowering of fused JAX chains; scheduling
+annotations (placement, batching, wait-for-any, dynamic-dispatch locality
+refs) travel on the IR and are consumed verbatim by the runtime lowering.
+``anyof`` nodes get *wait-for-any* semantics; fused ``lookup`` chains get
+the *to-be-continued* dynamic-dispatch treatment: the scheduler defers
+placement of the node until the resolved ref exists, then prefers an
+executor caching it (paper's split-DAG decision point).
 """
 from __future__ import annotations
 
 import itertools
-from typing import Any, Dict, Optional
+from typing import List, Optional
 
-from repro.core import operators as ops
-from repro.core.dataflow import Dataflow, Node
-from repro.core.rewrites import apply_rewrites
+from repro.core.dataflow import Dataflow
+from repro.core.ir import PhysicalPlan
+from repro.core.passes import PassContext, PassPipeline, PassTrace, \
+    build_pipeline
 from repro.core.table import Table
-from repro.runtime.dag import RuntimeDag, RuntimeNode
+from repro.runtime.dag import RuntimeDag
 
 _flow_ids = itertools.count()
 
 
-def _wrap(op: ops.Operator):
-    def fn(tables, ctx):
-        return op.apply(tables, ctx)
-    return fn
-
-
 def compile_flow(flow: Dataflow, runtime, *, fusion: bool = False,
                  competitive_exec: bool = False, locality: bool = False,
-                 default_replicas: int = 3,
+                 jit_fusion: bool = True, default_replicas: int = 3,
+                 pipeline: Optional[PassPipeline] = None,
                  name: Optional[str] = None) -> "DeployedFlow":
-    rewritten = apply_rewrites(
-        flow, fusion=fusion, competitive_exec=competitive_exec,
-        locality=locality, default_replicas=default_replicas)
+    """Compile + register ``flow``.  Pass either optimization flags (mapped
+    to a pass configuration via ``build_pipeline``) or an explicit
+    ``pipeline``."""
+    flow.typecheck()
+    plan = PhysicalPlan.from_dataflow(flow)
+    if pipeline is None:
+        pipeline = build_pipeline(
+            fusion=fusion, competitive_exec=competitive_exec,
+            locality=locality, jit_fusion=jit_fusion,
+            default_replicas=default_replicas)
+    ctx = PassContext()
+    plan = pipeline.run(plan, ctx)
     dag_name = name or f"flow{next(_flow_ids)}"
-    nodes: Dict[str, RuntimeNode] = {}
-    node_name: Dict[int, str] = {}
-    out_name = None
-    for n in rewritten.sorted_nodes():
-        if n.op is None:
-            continue
-        nm = f"{dag_name}/{n.id}:{n.op.name}"[:120]
-        node_name[n.id] = nm
-        deps = [node_name[u.id] for u in n.upstreams if u.op is not None]
-        rn = RuntimeNode(
-            name=nm, fn=_wrap(n.op), deps=deps,
-            resource_class=n.op.resource_class,
-            batching=n.op.batching,
-            wait_any=isinstance(n.op, ops.AnyOf),
-        )
-        # dynamic dispatch for fused lookups
-        lk = None
-        if isinstance(n.op, ops.Lookup):
-            lk = n.op
-        elif isinstance(n.op, ops.Fuse):
-            for sub in n.op.ops:
-                if isinstance(sub, ops.Lookup):
-                    lk = sub
-                    break
-        if lk is not None and locality:
-            if lk.is_column:
-                rn.locality_ref_column = lk.key
-            else:
-                rn.locality_const = lk.key
-        nodes[nm] = rn
-        out_name = nm
-    dag = RuntimeDag(dag_name, nodes, node_name[rewritten.output.id])
-    runtime.register_dag(dag)
-    return DeployedFlow(flow, rewritten, dag, runtime)
+    dag = runtime.register_plan(plan, dag_name)
+    return DeployedFlow(flow, plan, dag, runtime, ctx.trace)
 
 
 class DeployedFlow:
-    def __init__(self, flow: Dataflow, rewritten: Dataflow, dag: RuntimeDag,
-                 runtime):
+    def __init__(self, flow: Dataflow, plan: PhysicalPlan, dag: RuntimeDag,
+                 runtime, pass_trace: Optional[List[PassTrace]] = None):
         self.flow = flow
-        self.rewritten = rewritten
+        self.plan = plan
         self.dag = dag
         self.runtime = runtime
+        self.pass_trace = pass_trace or []
+
+    @property
+    def rewritten(self) -> Dataflow:
+        """The optimized plan, lifted back to a logical ``Dataflow``
+        (compatibility view; prefer ``.plan``)."""
+        return self.plan.to_dataflow()
 
     def execute(self, table: Table):
         return self.runtime.call_dag(self.dag.name, table)
@@ -89,3 +72,9 @@ class DeployedFlow:
     @property
     def function_names(self):
         return list(self.dag.nodes)
+
+    def explain(self) -> str:
+        """Human-readable compile report: plan + per-pass trace."""
+        lines = [repr(self.plan), ""]
+        lines += [repr(t) for t in self.pass_trace]
+        return "\n".join(lines)

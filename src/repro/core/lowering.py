@@ -1,0 +1,145 @@
+"""XLA-level lowering of fused JAX map chains (tentpole of the compilation
+pipeline).
+
+Graph-level fusion (``FuseChainsPass``) collapses a linear chain into one
+``Fuse`` node, but that node still *interprets* its sub-operators one Python
+call at a time — per-row, per-op dispatch plus runtime typechecks.  When the
+chain is entirely JAX-array ``Map`` operators placed on a GPU-class
+executor, we can do better: compose the per-op functions into one program
+and hand the whole thing to ``jax.jit``, so XLA fuses the arithmetic across
+operator boundaries and the runtime pays a single dispatch per row.
+
+``JittedFuse`` keeps the exact ``Fuse`` interface (schema/grouping
+propagation, ``ops`` list) so every graph-level invariant still holds; only
+``apply`` changes.  ``jax.jit`` compiles lazily on first call and re-uses
+the executable across rows and requests (shapes are stable in a serving
+pipeline, which is what makes this profitable).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+from repro.core import operators as ops
+from repro.core.table import Table
+
+try:  # the container bakes jax in, but keep the core importable without it
+    import jax
+    import jax.numpy as jnp
+except Exception:  # pragma: no cover
+    jax = None
+    jnp = None
+
+#: annotation types treated as "JAX array" for lowering.  Deliberately NOT
+#: np.ndarray: the jitted chain emits jax.Array values, so only fns that
+#: already declare jax.Array keep their downstream value types unchanged.
+_ARRAY_TYPES: Tuple[type, ...] = ()
+if jax is not None:
+    _ARRAY_TYPES = (jax.Array,)
+
+
+def _array_annotation(t) -> bool:
+    return any(t is a for a in _ARRAY_TYPES)
+
+
+def map_is_jax_lowerable(m: ops.Operator) -> bool:
+    """A ``Map`` whose argument and return annotations are all arrays.
+    ``m._schema`` already holds the expanded return types (tuple returns
+    included) from ``operators._ret_schema``."""
+    if not isinstance(m, ops.Map) or jax is None:
+        return False
+    arg_types = m._arg_types
+    if not arg_types or any(a is None or not _array_annotation(a)
+                            for a in arg_types):
+        return False
+    return all(_array_annotation(t) for _, t in m._schema)
+
+
+def fuse_is_jax_lowerable(fuse: ops.Operator, placement: str,
+                          min_ops: int = 2) -> bool:
+    """Eligibility: a ``Fuse`` of >= ``min_ops`` JAX-array maps placed on a
+    GPU-class node (accelerator-attached executor)."""
+    return (isinstance(fuse, ops.Fuse)
+            and not isinstance(fuse, JittedFuse)
+            and placement == "gpu"
+            and len(fuse.ops) >= min_ops
+            and all(map_is_jax_lowerable(m) for m in fuse.ops))
+
+
+@dataclasses.dataclass
+class JittedFuse(ops.Fuse):
+    """A fused chain of JAX map operators compiled to ONE jitted callable.
+
+    The composed function applies every constituent ``fn`` in sequence
+    inside a single trace, so XLA fuses across operator boundaries and each
+    row costs one dispatch instead of ``len(ops)`` interpreted calls.
+    """
+
+    def __post_init__(self):
+        if jax is None:  # pragma: no cover
+            raise RuntimeError("JittedFuse requires jax")
+        fns = [m.fn for m in self.ops]
+
+        def composed(*vals):
+            for fn in fns:
+                out = fn(*vals)
+                vals = out if isinstance(out, tuple) else (out,)
+            return vals
+
+        self._jitted = jax.jit(composed)
+        self._out_arity = len(self.ops[-1]._schema)
+        self._fallback = False
+        self._jit_succeeded = False
+
+    @property
+    def name(self):
+        return "jit[" + ",".join(o.name for o in self.ops) + "]"
+
+    @property
+    def jitted_fn(self):
+        """The single compiled callable (one per fused chain)."""
+        return self._jitted
+
+    def apply(self, tables: List[Table], ctx=None) -> Table:
+        if self._fallback:
+            return ops.Fuse.apply(self, tables, ctx)
+        (t,) = tables
+        schema = self.out_schema([t.schema])
+        rows = []
+        try:
+            for r in t.rows:
+                out = self._jitted(*(jnp.asarray(v) for v in r.values))
+                if len(out) != self._out_arity:
+                    raise ops.TypecheckError(
+                        f"{self.name}: returned {len(out)} values, schema "
+                        f"expects {self._out_arity}")
+                rows.append(r.replace(tuple(out)))
+        except ops.TypecheckError:
+            raise
+        except (jax.errors.JAXTypeError, TypeError, NotImplementedError):
+            # annotations said "array" but the fn is not jax-traceable
+            # (data-dependent control flow, numpy side effects, ...).
+            # Tracing happens on the first call, so only latch the
+            # permanent fallback before any jitted call has succeeded;
+            # a per-request data error on a proven-traceable chain (and
+            # transient runtime errors like XLA OOM) propagates instead
+            # of silently disabling the jitted path for the deployment.
+            if self._jit_succeeded:
+                raise
+            self._fallback = True
+            return ops.Fuse.apply(self, tables, ctx)
+        self._jit_succeeded = True
+        out_t = Table(schema, grouping=t.grouping)
+        out_t.rows = rows
+        return out_t
+
+
+def lower_fuse(fuse: ops.Fuse) -> JittedFuse:
+    """Lower an interpreted ``Fuse`` into a ``JittedFuse`` (annotations are
+    the caller's job — this only swaps the execution strategy)."""
+    lowered = JittedFuse(list(fuse.ops))
+    lowered.resource_class = fuse.resource_class
+    lowered.batching = fuse.batching
+    lowered.high_variance = fuse.high_variance
+    lowered.competitive_replicas = fuse.competitive_replicas
+    return lowered

@@ -1,0 +1,311 @@
+"""Pass manager over the physical-plan IR (paper §4 rewrites, re-expressed).
+
+Each optimization is a ``Pass``: a pure ``PhysicalPlan -> PhysicalPlan``
+transform.  ``PassPipeline`` runs a configured sequence, re-validating and
+re-typechecking the plan after every pass (so a broken transform fails at
+compile time, not in an executor thread) and recording a per-pass trace
+(op counts, wall time, notes) for the planner and for debugging.
+
+Passes:
+
+* ``FuseChainsPass``    — operator fusion: collapse single-consumer linear
+  chains into one ``Fuse`` op.  Optimization hints of the constituents
+  (``high_variance``, ``replicas``) survive onto the fused op, so fusion
+  composes with competitive execution instead of silently disabling it.
+* ``CompetitivePass``   — replicate high-variance ops k times, consume with
+  a wait-for-any op.
+* ``FuseLookupsPass``   — locality: fuse lookups into their consumer and
+  annotate the result for resolved-ref dynamic dispatch.
+* ``LowerJaxChainsPass`` — lower eligible fused JAX map chains into single
+  ``jax.jit`` callables (XLA-level fusion on top of graph-level fusion).
+
+``build_pipeline`` maps the planner's optimization flags onto a pass
+configuration — the plan *is* the pass configuration.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import time
+from typing import Dict, List, Optional, Protocol, runtime_checkable
+
+from repro.core import operators as ops
+from repro.core.ir import SOURCE_ID, PhysicalOp, PhysicalPlan
+from repro.core.lowering import fuse_is_jax_lowerable, lower_fuse
+
+
+@dataclasses.dataclass
+class PassTrace:
+    name: str
+    ops_before: int
+    ops_after: int
+    duration_s: float
+    notes: List[str] = dataclasses.field(default_factory=list)
+
+    def __repr__(self):
+        extra = f" ({'; '.join(self.notes)})" if self.notes else ""
+        return (f"{self.name}: {self.ops_before} -> {self.ops_after} ops "
+                f"in {self.duration_s * 1e3:.2f}ms{extra}")
+
+
+class PassContext:
+    """Mutable per-compilation state shared by the passes in a pipeline."""
+
+    def __init__(self):
+        self.trace: List[PassTrace] = []
+        self.notes: List[str] = []
+
+    def note(self, msg: str):
+        self.notes.append(msg)
+
+
+@runtime_checkable
+class Pass(Protocol):
+    """A plan transform.  Implementations must be pure w.r.t. the input
+    plan (``PhysicalPlan`` is immutable; build a new one via ``with_ops``)."""
+    name: str
+
+    def run(self, plan: PhysicalPlan, ctx: PassContext) -> PhysicalPlan:
+        ...
+
+
+class PassPipeline:
+    """Runs passes in order with post-pass validation + typechecking."""
+
+    def __init__(self, passes: List[Pass], *, validate: bool = True):
+        self.passes = list(passes)
+        self.validate = validate
+
+    def run(self, plan: PhysicalPlan,
+            ctx: Optional[PassContext] = None) -> PhysicalPlan:
+        ctx = ctx or PassContext()
+        if self.validate:
+            plan.validate()
+            plan.typecheck()
+        for p in self.passes:
+            before = len(plan.ops)
+            notes_start = len(ctx.notes)
+            t0 = time.perf_counter()
+            plan = p.run(plan, ctx)
+            dt = time.perf_counter() - t0
+            if self.validate:
+                plan.validate()
+                plan.typecheck()   # every pass must preserve well-typedness
+            ctx.trace.append(PassTrace(p.name, before, len(plan.ops), dt,
+                                       list(ctx.notes[notes_start:])))
+        return plan
+
+    def __repr__(self):
+        return "PassPipeline[" + " -> ".join(p.name for p in self.passes) + "]"
+
+
+# ---------------------------------------------------------------------------
+# helpers shared by the fusion-shaped passes
+# ---------------------------------------------------------------------------
+
+def _sub_ops(op: ops.Operator) -> List[ops.Operator]:
+    return list(op.ops) if isinstance(op, ops.Fuse) else [op]
+
+
+def _starts_with_lookup(op: ops.Operator) -> bool:
+    subs = _sub_ops(op)
+    return bool(subs) and isinstance(subs[0], ops.Lookup)
+
+
+def _ends_with_lookup(op: ops.Operator) -> bool:
+    subs = _sub_ops(op)
+    return bool(subs) and isinstance(subs[-1], ops.Lookup)
+
+
+def _merge(plan: PhysicalPlan, up: PhysicalOp, down: PhysicalOp) -> PhysicalPlan:
+    """Replace ``up -> down`` with one fused op in ``down``'s slot.  Hints
+    from BOTH constituents survive (fusion must not disable competitive
+    replication downstream — see ISSUE satellite on dropped hints)."""
+    fused = ops.Fuse(_sub_ops(up.op) + _sub_ops(down.op))
+    fused.resource_class = down.placement
+    fused.batching = down.batching
+    fused.high_variance = up.high_variance or down.high_variance
+    fused.competitive_replicas = max(up.replicas, down.replicas)
+    merged = down.replace(
+        op=fused, inputs=up.inputs,
+        placement=down.placement, batching=down.batching,
+        high_variance=fused.high_variance,
+        replicas=fused.competitive_replicas,
+        locality_ref_column=down.locality_ref_column or up.locality_ref_column,
+        locality_const=down.locality_const or up.locality_const)
+    new_ops = [merged if o.op_id == down.op_id else o
+               for o in plan.ops if o.op_id != up.op_id]
+    return plan.with_ops(new_ops)
+
+
+def _fusible_edge(plan: PhysicalPlan, down: PhysicalOp,
+                  counts: Dict[int, int]) -> Optional[PhysicalOp]:
+    """The structural preconditions shared by fusion and lookup-fusion:
+    ``down`` has one input, which is a non-source op with exactly one
+    consumer, itself single-input, not the output, not wait-any."""
+    if len(down.inputs) != 1 or down.inputs[0] == SOURCE_ID:
+        return None
+    up = plan.op(down.inputs[0])
+    if counts.get(up.op_id, 0) != 1 or up.op_id == plan.output_id:
+        return None
+    if len(up.inputs) != 1 or up.wait_any:
+        return None
+    return up
+
+
+@dataclasses.dataclass
+class FuseChainsPass:
+    """Operator fusion (paper §4): greedily collapse linear chains."""
+    across_resource_classes: bool = False
+    preserve_lookup_boundaries: bool = False
+    name: str = dataclasses.field(default="fuse-chains", init=False)
+
+    def run(self, plan: PhysicalPlan, ctx: PassContext) -> PhysicalPlan:
+        fused_edges = 0
+        changed = True
+        while changed:
+            changed = False
+            counts = plan.consumer_counts()
+            for down in plan.ops:
+                up = _fusible_edge(plan, down, counts)
+                if up is None:
+                    continue
+                if self.preserve_lookup_boundaries and \
+                        _starts_with_lookup(down.op):
+                    # keep the upstream un-fused so dynamic dispatch sees
+                    # the resolved ref (the paper's to-be-continued split)
+                    continue
+                if not self.across_resource_classes and \
+                        up.placement != down.placement:
+                    continue
+                if up.batching != down.batching:
+                    continue
+                plan = _merge(plan, up, down)
+                fused_edges += 1
+                changed = True
+                break
+        if fused_edges:
+            ctx.note(f"fused {fused_edges} edges")
+        return plan
+
+
+@dataclasses.dataclass
+class CompetitivePass:
+    """Competitive execution (paper §4): replicate high-variance ops and
+    consume the replicas with wait-for-any."""
+    default_replicas: int = 3
+    name: str = dataclasses.field(default="competitive", init=False)
+
+    def run(self, plan: PhysicalPlan, ctx: PassContext) -> PhysicalPlan:
+        next_id = plan.next_id()
+        new_ops: List[PhysicalOp] = []
+        expanded = 0
+        for o in plan.ops:
+            k = o.replicas or (self.default_replicas if o.high_variance
+                               else 0)
+            if k <= 1 or o.wait_any:
+                new_ops.append(o)
+                continue
+            replica_ids = []
+            for _ in range(k):
+                rep_op = copy.copy(o.op)
+                rep_op.competitive_replicas = 0
+                rep_op.high_variance = False
+                new_ops.append(PhysicalOp(
+                    op_id=next_id, op=rep_op, inputs=o.inputs,
+                    placement=o.placement, batching=o.batching,
+                    locality_ref_column=o.locality_ref_column,
+                    locality_const=o.locality_const))
+                replica_ids.append(next_id)
+                next_id += 1
+            # the original slot becomes the wait-for-any consumer, so every
+            # downstream reference to o.op_id keeps working; the anyof is a
+            # trivial pass-through — always place it on cpu, never on the
+            # scarce accelerator pool
+            new_ops.append(PhysicalOp(
+                op_id=o.op_id, op=ops.AnyOf(), inputs=tuple(replica_ids),
+                placement="cpu", wait_any=True))
+            expanded += 1
+            ctx.note(f"%{o.op_id} ({o.op.name}) x{k}")
+        if expanded:
+            ctx.note(f"replicated {expanded} ops")
+        return plan.with_ops(new_ops)
+
+
+@dataclasses.dataclass
+class FuseLookupsPass:
+    """Data locality (paper §4): fuse each lookup into its single consumer
+    so compute is colocated with the cached data, then annotate every op
+    containing a lookup for resolved-ref dynamic dispatch."""
+    name: str = dataclasses.field(default="fuse-lookups", init=False)
+
+    def run(self, plan: PhysicalPlan, ctx: PassContext) -> PhysicalPlan:
+        changed = True
+        while changed:
+            changed = False
+            counts = plan.consumer_counts()
+            for down in plan.ops:
+                up = _fusible_edge(plan, down, counts)
+                if up is None or not _ends_with_lookup(up.op):
+                    continue
+                plan = _merge(plan, up, down)
+                changed = True
+                break
+        # annotate for dynamic dispatch: the scheduler defers placement
+        # until the ref is resolved, then prefers an executor caching it
+        new_ops = []
+        annotated = 0
+        for o in plan.ops:
+            lk = next((s for s in _sub_ops(o.op)
+                       if isinstance(s, ops.Lookup)), None)
+            if lk is not None and o.locality_key is None:
+                o = o.replace(
+                    locality_ref_column=lk.key if lk.is_column else None,
+                    locality_const=None if lk.is_column else lk.key)
+                annotated += 1
+            new_ops.append(o)
+        if annotated:
+            ctx.note(f"annotated {annotated} lookup ops for locality")
+        return plan.with_ops(new_ops)
+
+
+@dataclasses.dataclass
+class LowerJaxChainsPass:
+    """Lower fused GPU-placed JAX map chains to single ``jax.jit``
+    callables — XLA fuses across operator boundaries, one dispatch/row."""
+    min_ops: int = 2
+    name: str = dataclasses.field(default="lower-jax-chains", init=False)
+
+    def run(self, plan: PhysicalPlan, ctx: PassContext) -> PhysicalPlan:
+        new_ops = []
+        lowered = 0
+        for o in plan.ops:
+            if fuse_is_jax_lowerable(o.op, o.placement, self.min_ops):
+                o = o.replace(op=lower_fuse(o.op))
+                lowered += 1
+                ctx.note(f"%{o.op_id}: {len(o.op.ops)} maps -> 1 jitted fn")
+            new_ops.append(o)
+        if lowered:
+            ctx.note(f"lowered {lowered} chains to XLA")
+        return plan.with_ops(new_ops)
+
+
+def build_pipeline(*, fusion: bool = False, competitive_exec: bool = False,
+                   locality: bool = False, jit_fusion: bool = True,
+                   default_replicas: int = 3,
+                   validate: bool = True) -> PassPipeline:
+    """Map optimization flags (a planner ``Plan`` or user choices) onto a
+    pass configuration.  Order mirrors the paper's rewrite order: locality
+    first (lookup fusion feeds dispatch), then replication, then fusion
+    (boundary-aware when locality is on), then XLA lowering of whatever
+    fusion produced."""
+    passes: List[Pass] = []
+    if locality:
+        passes.append(FuseLookupsPass())
+    if competitive_exec:
+        passes.append(CompetitivePass(default_replicas=default_replicas))
+    if fusion:
+        passes.append(FuseChainsPass(preserve_lookup_boundaries=locality))
+    if jit_fusion and fusion:
+        passes.append(LowerJaxChainsPass())
+    return PassPipeline(passes, validate=validate)

@@ -46,12 +46,22 @@ class Plan:
     replicas: Dict[int, int]            # node id -> competitive replicas
     profiles: Dict[int, OpProfile]
     notes: List[str]
+    jit_fusion: bool = True             # lower fused JAX chains to XLA
+    default_replicas: int = 3
 
     @property
     def flags(self) -> Dict[str, Any]:
         return {"fusion": self.fusion,
                 "competitive_exec": self.competitive_exec,
-                "locality": self.locality}
+                "locality": self.locality,
+                "jit_fusion": self.jit_fusion,
+                "default_replicas": self.default_replicas}
+
+    def build_pipeline(self):
+        """The plan IS a pass configuration: materialize it as the
+        ``PassPipeline`` the compiler will run over the physical-plan IR."""
+        from repro.core.passes import build_pipeline
+        return build_pipeline(**self.flags)
 
 
 class _ProfileCtx:
@@ -144,9 +154,34 @@ def make_plan(flow: Dataflow, sample: Table, *, net: Optional[NetModel] = None,
             locality = True
             notes.append(f"locality: lookup node {n.id} moves "
                          f"{profiles[n.id].out_bytes/1e6:.2f} MB")
+
+    # -- XLA lowering: fused GPU JAX chains compile to one jitted callable ---
+    # count *fusable adjacent* lowerable-map edges (same structural
+    # conditions fusion uses), so the note only fires when LowerJaxChains
+    # will actually get a >=2-op chain to compile
+    from repro.core.lowering import map_is_jax_lowerable
+    counts: Dict[int, int] = {}
+    for n in flow.sorted_nodes():
+        for u in n.upstreams:
+            counts[u.id] = counts.get(u.id, 0) + 1
+
+    def _lowerable_gpu(n) -> bool:
+        return (n.op is not None and n.op.resource_class == "gpu"
+                and map_is_jax_lowerable(n.op))
+
+    jit_edges = sum(
+        1 for n in flow.sorted_nodes()
+        if _lowerable_gpu(n) and len(n.upstreams) == 1
+        and _lowerable_gpu(n.upstreams[0])
+        and counts.get(n.upstreams[0].id, 0) == 1)
+    jit_fusion = bool(fusion and jit_edges >= 1)
+    if jit_fusion:
+        notes.append(f"jit: {jit_edges} fusable gpu jax map edges are "
+                     "XLA-lowerable after fusion")
     return Plan(fusion=fusion, competitive_exec=competitive_exec,
                 locality=locality, replicas=rep, profiles=profiles,
-                notes=notes)
+                notes=notes, jit_fusion=jit_fusion,
+                default_replicas=replicas)
 
 
 def auto_deploy(flow: Dataflow, runtime, sample: Table, *, runs: int = 3,
@@ -154,5 +189,5 @@ def auto_deploy(flow: Dataflow, runtime, sample: Table, *, runs: int = 3,
     """Profile, plan, and deploy in one call (paper §7 made concrete)."""
     plan = make_plan(flow, sample, net=runtime.net, runs=runs,
                      kvs=runtime.kvs, **plan_kwargs)
-    deployed = flow.deploy(runtime, **plan.flags)
+    deployed = flow.deploy(runtime, pipeline=plan.build_pipeline())
     return deployed, plan

@@ -1,148 +1,47 @@
-"""Dataflow rewrites (paper §4): Cloudflow -> Cloudflow graph transforms.
+"""Dataflow rewrites (paper §4) — compatibility shims.
 
-* ``fuse_chains`` — operator fusion: greedily collapse linear chains into a
-  single ``Fuse`` operator (optionally not across resource-class boundaries).
-* ``competitive`` — replicate high-variance operators k times and consume the
-  results with ``anyof`` (wait-for-any).
-* ``fuse_lookups`` — locality: fuse each ``lookup`` with its *downstream*
-  operator so processing is colocated with the data; the compiler then marks
-  the fused node for dynamic dispatch.
+The transforms now live as passes over the physical-plan IR
+(``repro.core.passes``); these wrappers keep the original logical-level
+API: each lowers the ``Dataflow`` to a ``PhysicalPlan``, runs the
+corresponding pass, and lifts the result back to a ``Dataflow``.
+
+* ``fuse_chains``  -> ``FuseChainsPass``
+* ``competitive``  -> ``CompetitivePass``
+* ``fuse_lookups`` -> ``FuseLookupsPass``
+* ``apply_rewrites`` -> ``build_pipeline`` over the optimization flags
+
+New code should use ``PhysicalPlan.from_dataflow`` + ``PassPipeline``
+directly (as ``repro.core.compiler`` does) and skip the round-trip.
 """
 from __future__ import annotations
 
-import copy
-import dataclasses
-from typing import Dict, List, Optional, Tuple
-
-from repro.core import operators as ops
-from repro.core.dataflow import Dataflow, Node
+from repro.core.dataflow import Dataflow
+from repro.core.ir import PhysicalPlan
+from repro.core.passes import (CompetitivePass, FuseChainsPass,
+                               FuseLookupsPass, PassContext, build_pipeline)
 
 
-def _clone_flow(flow: Dataflow) -> Dataflow:
-    new = Dataflow(flow.input_schema)
-    mapping: Dict[int, Node] = {flow.source.id: new.source}
-
-    def clone(n: Node) -> Node:
-        if n.id in mapping:
-            return mapping[n.id]
-        ups = [clone(u) for u in n.upstreams]
-        nn = Node(new, n.op, ups)
-        mapping[n.id] = nn
-        return nn
-
-    new.output = clone(flow.output)
-    return new
-
-
-def _downstream_counts(flow: Dataflow) -> Dict[int, int]:
-    counts: Dict[int, int] = {}
-    for n in flow.sorted_nodes():
-        for u in n.upstreams:
-            counts[u.id] = counts.get(u.id, 0) + 1
-    return counts
-
-
-def _starts_with_lookup(op) -> bool:
-    return isinstance(op, ops.Lookup) or (
-        isinstance(op, ops.Fuse) and op.ops
-        and isinstance(op.ops[0], ops.Lookup))
+def _via_pass(flow: Dataflow, p) -> Dataflow:
+    plan = PhysicalPlan.from_dataflow(flow)
+    return p.run(plan, PassContext()).to_dataflow()
 
 
 def fuse_chains(flow: Dataflow, *, across_resource_classes: bool = False,
                 preserve_lookup_boundaries: bool = False) -> Dataflow:
-    """Collapse a->b chains where a has exactly one consumer (b) and b has a
-    single input.  ``Fuse(ops)`` executes at one location (paper §4).
-    With ``preserve_lookup_boundaries`` a node whose chain STARTS with a
-    lookup keeps its upstream un-fused so the dynamic-dispatch scheduler
-    sees the resolved ref (the paper's to-be-continued split point)."""
-    flow = _clone_flow(flow)
-    changed = True
-    while changed:
-        changed = False
-        counts = _downstream_counts(flow)
-        for n in flow.sorted_nodes():
-            if n.op is None or len(n.upstreams) != 1:
-                continue
-            up = n.upstreams[0]
-            if up.op is None or counts.get(up.id, 0) != 1:
-                continue
-            if len(up.upstreams) != 1:   # never fuse across multi-input ops
-                continue
-            if isinstance(up.op, ops.AnyOf):
-                continue
-            if preserve_lookup_boundaries and _starts_with_lookup(n.op):
-                continue
-            if not across_resource_classes:
-                if up.op.resource_class != n.op.resource_class:
-                    continue
-            if up.op.batching != n.op.batching:
-                continue
-            up_ops = up.op.ops if isinstance(up.op, ops.Fuse) else [up.op]
-            n_ops = n.op.ops if isinstance(n.op, ops.Fuse) else [n.op]
-            fused = ops.Fuse(up_ops + n_ops)
-            fused.resource_class = n.op.resource_class
-            fused.batching = n.op.batching
-            n.op = fused
-            n.upstreams = list(up.upstreams)
-            changed = True
-            break
-    return flow
+    """Collapse single-consumer linear chains into ``Fuse`` ops (§4)."""
+    return _via_pass(flow, FuseChainsPass(
+        across_resource_classes=across_resource_classes,
+        preserve_lookup_boundaries=preserve_lookup_boundaries))
 
 
 def competitive(flow: Dataflow, *, default_replicas: int = 3) -> Dataflow:
-    """Replicate operators flagged high_variance (or with explicit
-    ``competitive_replicas``) and add ``anyof`` (paper §4)."""
-    flow = _clone_flow(flow)
-    for n in list(flow.sorted_nodes()):
-        if n.op is None:
-            continue
-        k = n.op.competitive_replicas or (
-            default_replicas if n.op.high_variance else 0)
-        if k <= 1:
-            continue
-        replicas = []
-        for _ in range(k):
-            rep_op = copy.copy(n.op)
-            rep = Node(flow, rep_op, list(n.upstreams))
-            replicas.append(rep)
-        # n becomes the anyof consuming the replicas
-        n.op = ops.AnyOf()
-        n.upstreams = replicas
-    return flow
+    """Replicate high-variance ops and consume with ``anyof`` (§4)."""
+    return _via_pass(flow, CompetitivePass(default_replicas=default_replicas))
 
 
 def fuse_lookups(flow: Dataflow) -> Dataflow:
-    """Fuse each lookup with its single downstream consumer so computation is
-    colocated with the cached data (paper §4: Data Locality)."""
-    flow = _clone_flow(flow)
-    changed = True
-    while changed:
-        changed = False
-        counts = _downstream_counts(flow)
-        for n in flow.sorted_nodes():
-            if n.op is None or len(n.upstreams) != 1:
-                continue
-            up = n.upstreams[0]
-            if up.op is None or counts.get(up.id, 0) != 1:
-                continue
-            if len(up.upstreams) != 1:
-                continue
-            is_lookup = isinstance(up.op, ops.Lookup) or (
-                isinstance(up.op, ops.Fuse)
-                and isinstance(up.op.ops[-1], ops.Lookup))
-            if not is_lookup or isinstance(n.op, (ops.Fuse,)):
-                pass
-            if not is_lookup:
-                continue
-            up_ops = up.op.ops if isinstance(up.op, ops.Fuse) else [up.op]
-            n_ops = n.op.ops if isinstance(n.op, ops.Fuse) else [n.op]
-            fused = ops.Fuse(up_ops + n_ops)
-            fused.resource_class = n.op.resource_class
-            n.op = fused
-            n.upstreams = list(up.upstreams)
-            changed = True
-            break
-    return flow
+    """Fuse lookups into their consumer for data locality (§4)."""
+    return _via_pass(flow, FuseLookupsPass())
 
 
 def apply_rewrites(flow: Dataflow, *, fusion: bool = False,
@@ -150,11 +49,10 @@ def apply_rewrites(flow: Dataflow, *, fusion: bool = False,
                    locality: bool = False,
                    default_replicas: int = 3) -> Dataflow:
     flow.typecheck()
-    if locality:
-        flow = fuse_lookups(flow)
-    if competitive_exec:
-        flow = competitive(flow, default_replicas=default_replicas)
-    if fusion:
-        flow = fuse_chains(flow, preserve_lookup_boundaries=locality)
-    flow.typecheck()
-    return flow
+    pipeline = build_pipeline(fusion=fusion, competitive_exec=competitive_exec,
+                              locality=locality, jit_fusion=False,
+                              default_replicas=default_replicas)
+    plan = pipeline.run(PhysicalPlan.from_dataflow(flow))
+    out = plan.to_dataflow()
+    out.typecheck()
+    return out

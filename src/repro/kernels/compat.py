@@ -1,0 +1,18 @@
+"""Pallas API compatibility across jax versions.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in
+newer jax releases; the kernels are written against the new name.  Import
+``CompilerParams`` from here so both work.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+
+if CompilerParams is None:             # fail loudly at the call site
+    def CompilerParams(*args, **kwargs):
+        raise ImportError(
+            "this jax version exposes neither pallas.tpu.CompilerParams "
+            "nor TPUCompilerParams; update repro.kernels.compat for it")

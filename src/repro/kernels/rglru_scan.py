@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _rglru_kernel(a_ref, x_ref, h0_ref, y_ref, h_ref, *, ct: int):
     ci = pl.program_id(2)
@@ -57,7 +59,7 @@ def rglru_scan(a, x, h0=None, *, chunk: int = 128, block_r: int = 512,
         out_specs=pl.BlockSpec((1, ct, br), lambda b, r, c: (b, c, r)),
         out_shape=jax.ShapeDtypeStruct((B, T, R), jnp.float32),
         scratch_shapes=[pltpu.VMEM((br,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, x, h0)

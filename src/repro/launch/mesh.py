@@ -10,13 +10,22 @@ from jax.sharding import Mesh
 from repro.models.partition import AxisInfo
 
 
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """Version-compatible ``jax.make_mesh`` with Auto axis types.
+    jax.sharding.AxisType only exists in newer jax; omit on 0.4.x."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
     Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_axis_info(mesh: Mesh, *, shard_batch: bool = True) -> AxisInfo:
@@ -29,5 +38,4 @@ def make_axis_info(mesh: Mesh, *, shard_batch: bool = True) -> AxisInfo:
 def make_host_mesh(shape: Tuple[int, ...] = (1, 1),
                    axes: Tuple[str, ...] = ("data", "model")) -> Mesh:
     """Small mesh over however many (host) devices exist — used by tests."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

@@ -1,11 +1,16 @@
-"""Runtime DAG: what the Cloudflow compiler emits (Cloudburst-DAG analogue).
+"""Runtime DAG: what the compilation pipeline emits (Cloudburst-DAG
+analogue).
 
 Each node is a named function over Tables with scheduling annotations:
 ``resource_class`` (cpu/gpu executor pools), ``batching`` (batch-aware fn),
-``wait_any`` (wait-for-any semantics for anyof), and ``tbc`` — the
+``wait_any`` (wait-for-any semantics for anyof), ``jitted`` (the node's fn
+is a single XLA-compiled callable), and the locality refs — the
 *to-be-continued* annotation for dynamic dispatch: the node's result carries
 a resolved KVS ref and the scheduler places the continuation DAG on a
 machine likely caching that ref (paper §4).
+
+``RuntimeDag.from_plan`` is the lowering from the physical-plan IR: one
+``RuntimeNode`` per ``PhysicalOp``, annotations copied verbatim.
 """
 from __future__ import annotations
 
@@ -23,9 +28,11 @@ class RuntimeNode:
     resource_class: str = "cpu"
     batching: bool = False
     wait_any: bool = False
+    jitted: bool = False
     # dynamic dispatch: column holding the resolved KVS ref (or a constant)
     locality_ref_column: Optional[str] = None
     locality_const: Optional[str] = None
+    plan_op_id: Optional[int] = None            # provenance into the IR
 
 
 @dataclasses.dataclass
@@ -33,6 +40,38 @@ class RuntimeDag:
     name: str
     nodes: Dict[str, RuntimeNode]
     output: str
+
+    @classmethod
+    def from_plan(cls, plan, dag_name: str) -> "RuntimeDag":
+        """Lower a ``repro.core.ir.PhysicalPlan`` to a runtime DAG."""
+        from repro.core.lowering import JittedFuse
+
+        def wrap(op):
+            def fn(tables, ctx):
+                return op.apply(tables, ctx)
+            return fn
+
+        nodes: Dict[str, RuntimeNode] = {}
+        names: Dict[int, str] = {}
+        out_name = None
+        for o in plan.ops:
+            nm = f"{dag_name}/{o.op_id}:{o.op.name}"[:120]
+            names[o.op_id] = nm
+            nodes[nm] = RuntimeNode(
+                name=nm, fn=wrap(o.op),
+                deps=[names[i] for i in o.inputs if i in names],
+                resource_class=o.placement,
+                batching=o.batching,
+                wait_any=o.wait_any,
+                jitted=isinstance(o.op, JittedFuse),
+                locality_ref_column=o.locality_ref_column,
+                locality_const=o.locality_const,
+                plan_op_id=o.op_id,
+            )
+            out_name = nm
+        dag = cls(dag_name, nodes, names.get(plan.output_id, out_name))
+        dag.validate()
+        return dag
 
     def topo(self) -> List[RuntimeNode]:
         order, seen = [], set()

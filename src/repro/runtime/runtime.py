@@ -39,16 +39,47 @@ class Runtime:
         self.pool = ExecutorPool(self.kvs, self.net, n_cpu=n_cpu, n_gpu=n_gpu,
                                  cache_bytes=cache_bytes)
         self.dags: Dict[str, RuntimeDag] = {}
+        self.plans: Dict[str, Any] = {}     # dag name -> PhysicalPlan
         self.max_batch = max_batch
         self.batch_wait_ms = batch_wait_ms
         self._batchers: Dict[str, Batcher] = {}
+        self._retired_batchers: List[Batcher] = []
         self._rng = random.Random(seed)
         self.metrics: Dict[str, List[float]] = {}
 
     # -- registration ---------------------------------------------------------
-    def register_dag(self, dag: RuntimeDag):
+    def register_dag(self, dag: RuntimeDag, plan=None):
+        """Register a runtime DAG; ``plan`` (the PhysicalPlan it was lowered
+        from) is kept for introspection/debugging.  Re-registering under an
+        existing name drops the old deployment's batchers (their closures
+        captured the old nodes)."""
         dag.validate()
+        old = self.dags.get(dag.name)
+        if old is not None:
+            # detach the old deployment's batchers: their closures captured
+            # the old nodes, but they must still drain in-flight requests
+            for node_name in old.nodes:
+                b = self._batchers.pop(node_name, None)
+                if b is not None:
+                    self._retired_batchers.append(b)
+        # close retired batchers that have drained (bounds thread leakage
+        # across repeated re-registrations)
+        still_draining = []
+        for b in self._retired_batchers:
+            if b.q.empty():
+                b.close()
+            else:
+                still_draining.append(b)
+        self._retired_batchers = still_draining
         self.dags[dag.name] = dag
+        if plan is not None:
+            self.plans[dag.name] = plan
+
+    def register_plan(self, plan, name: str) -> RuntimeDag:
+        """Lower a ``PhysicalPlan`` and register it in one step."""
+        dag = RuntimeDag.from_plan(plan, name)
+        self.register_dag(dag, plan=plan)
+        return dag
 
     # -- scheduling -------------------------------------------------------------
     def pick_executor(self, node: RuntimeNode,
@@ -130,7 +161,7 @@ class Runtime:
 
     def stop(self):
         self.pool.stop()
-        for b in self._batchers.values():
+        for b in list(self._batchers.values()) + self._retired_batchers:
             b.close()
 
 

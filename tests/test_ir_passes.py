@@ -1,0 +1,352 @@
+"""Physical-plan IR + pass-manager coverage.
+
+* property-style equivalence: every pass combination over randomized DAGs
+  preserves ``execute_local`` semantics (seeded ``random``, no hypothesis
+  dependency — these must run in the minimal environment);
+* JIT lowering: a fused JAX chain compiles to ONE jitted callable and
+  produces outputs identical to the interpreted path;
+* hint preservation: fusion keeps ``high_variance``/``competitive_replicas``
+  so fusion-then-competitive still replicates;
+* IR invariants: validation catches malformed plans, traces are recorded,
+  runtime lowering carries the annotations.
+"""
+import itertools
+import random
+
+import pytest
+
+from repro.core import operators as ops
+from repro.core.dataflow import Dataflow
+from repro.core.ir import SOURCE_ID, PhysicalOp, PhysicalPlan, PlanError
+from repro.core.lowering import JittedFuse
+from repro.core.passes import (CompetitivePass, FuseChainsPass,
+                               LowerJaxChainsPass, PassContext, PassPipeline,
+                               build_pipeline)
+from repro.core.rewrites import apply_rewrites, competitive, fuse_chains
+from repro.core.table import Table
+
+
+def _inc(a: int, b: int) -> tuple[int, int]:
+    return a + 1, b
+
+
+def _flip(a: int, b: int) -> tuple[int, int]:
+    return b, a
+
+
+def _mix(a: int, b: int) -> tuple[int, int]:
+    return a + b, a - b
+
+
+def _keep(a: int, b: int) -> bool:
+    return (a + b) % 3 != 0
+
+
+def _random_flow(rng: random.Random) -> Dataflow:
+    """A random DAG of maps/filters with branches, unions, and hints."""
+    fl = Dataflow([("a", int), ("b", int)])
+    frontier = [fl.source]
+    for _ in range(rng.randint(2, 8)):
+        node = rng.choice(frontier)
+        roll = rng.random()
+        if roll < 0.55:
+            fn = rng.choice([_inc, _flip, _mix])
+            hints = {}
+            if rng.random() < 0.25:
+                hints["competitive_replicas"] = rng.randint(2, 3)
+            if rng.random() < 0.2:
+                hints["high_variance"] = True
+            if rng.random() < 0.2:
+                hints["gpu"] = True
+            frontier.append(node.map(fn, names=["a", "b"], **hints))
+        elif roll < 0.75:
+            frontier.append(node.filter(_keep))
+        elif len(frontier) >= 2:
+            other = rng.choice([n for n in frontier if n is not node])
+            if other is not fl.source and node is not fl.source:
+                frontier.append(node.union(other))
+    tail = frontier[-1] if frontier[-1] is not fl.source else \
+        fl.source.map(_inc, names=["a", "b"])
+    if rng.random() < 0.3:
+        tail = tail.groupby("a").agg("sum", "b")
+    fl.output = tail
+    return fl
+
+
+def _sample(rng: random.Random) -> Table:
+    n = rng.randint(0, 12)
+    return Table([("a", int), ("b", int)],
+                 [(rng.randint(-50, 50), rng.randint(-50, 50))
+                  for _ in range(n)])
+
+
+def _sorted_dicts(t: Table):
+    return sorted((sorted(d.items()) for d in t.to_dicts()))
+
+
+def test_random_dags_all_pass_combinations_preserve_semantics():
+    for seed in range(25):
+        rng = random.Random(seed)
+        fl = _random_flow(rng)
+        t = _sample(rng)
+        expected = _sorted_dicts(fl.execute_local(t))
+        for fusion, comp, loc in itertools.product((False, True), repeat=3):
+            pipeline = build_pipeline(fusion=fusion, competitive_exec=comp,
+                                      locality=loc)
+            plan = pipeline.run(PhysicalPlan.from_dataflow(fl))
+            got = _sorted_dicts(plan.execute_local(t))
+            assert got == expected, (
+                f"seed={seed} fusion={fusion} comp={comp} loc={loc}")
+            # the logical round-trip must agree too (shim path)
+            rt = _sorted_dicts(plan.to_dataflow().execute_local(t))
+            assert rt == expected
+
+
+def test_apply_rewrites_shim_matches_pipeline():
+    for seed in range(10):
+        rng = random.Random(100 + seed)
+        fl = _random_flow(rng)
+        t = _sample(rng)
+        base = _sorted_dicts(fl.execute_local(t))
+        out = apply_rewrites(fl, fusion=True, competitive_exec=True,
+                             locality=True)
+        assert _sorted_dicts(out.execute_local(t)) == base
+
+
+# ---------------------------------------------------------------------------
+# JIT lowering
+# ---------------------------------------------------------------------------
+
+def _jax_chain(n=3, gpu=True):
+    import jax
+    import jax.numpy as jnp
+
+    def f1(x: jax.Array) -> jax.Array:
+        return jnp.tanh(x * 1.01 + 0.1)
+
+    def f2(x: jax.Array) -> jax.Array:
+        return x * x - 0.5 * x
+
+    def f3(x: jax.Array) -> jax.Array:
+        return jnp.exp(-jnp.abs(x)) + x
+
+    fl = Dataflow([("x", jax.Array)])
+    node = fl.source
+    for f in (f1, f2, f3)[:n]:
+        node = node.map(f, names=["x"], gpu=gpu)
+    fl.output = node
+    return fl
+
+
+def test_jax_chain_lowers_to_single_jitted_callable():
+    jax = pytest.importorskip("jax")
+    jnp = jax.numpy
+    fl = _jax_chain(3)
+    jit_plan = build_pipeline(fusion=True, jit_fusion=True).run(
+        PhysicalPlan.from_dataflow(fl))
+    interp_plan = build_pipeline(fusion=True, jit_fusion=False).run(
+        PhysicalPlan.from_dataflow(fl))
+    assert len(jit_plan.ops) == 1
+    lowered = jit_plan.ops[0].op
+    assert isinstance(lowered, JittedFuse)
+    assert len(lowered.ops) == 3
+    assert lowered.jitted_fn is not None        # exactly one compiled callable
+    assert not isinstance(interp_plan.ops[0].op, JittedFuse)
+
+    import numpy as np
+    x = jnp.linspace(-2.0, 2.0, 257)
+    t = Table([("x", jax.Array)], [(x,)])
+    a = jit_plan.execute_local(t).rows[0].values[0]
+    b = interp_plan.execute_local(t).rows[0].values[0]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_jit_lowering_falls_back_for_untraceable_fns():
+    """Array annotations don't guarantee jax-traceability; a lowered chain
+    whose fn has data-dependent control flow must fall back to the
+    interpreted path instead of crashing at request time."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    import numpy as np
+
+    def branchy(x: jax.Array) -> jax.Array:
+        return x + 1 if float(x.sum()) > 0 else x - 1   # not traceable
+
+    def double(x: jax.Array) -> jax.Array:
+        return x * 2
+
+    fl = Dataflow([("x", jax.Array)])
+    fl.output = fl.map(branchy, names=["x"], gpu=True).map(
+        double, names=["x"], gpu=True)
+    plan = build_pipeline(fusion=True, jit_fusion=True).run(
+        PhysicalPlan.from_dataflow(fl))
+    assert isinstance(plan.ops[0].op, JittedFuse)
+    t = Table([("x", jax.Array)], [(jnp.ones(4),)])
+    out = plan.execute_local(t)
+    np.testing.assert_allclose(np.asarray(out.rows[0].values[0]),
+                               np.full(4, 4.0))
+
+
+def test_jit_lowering_requires_gpu_placement():
+    pytest.importorskip("jax")
+    fl = _jax_chain(3, gpu=False)
+    plan = build_pipeline(fusion=True, jit_fusion=True).run(
+        PhysicalPlan.from_dataflow(fl))
+    assert len(plan.ops) == 1
+    assert isinstance(plan.ops[0].op, ops.Fuse)
+    assert not isinstance(plan.ops[0].op, JittedFuse)
+
+
+def test_runtime_dag_lowering_marks_jitted_node():
+    pytest.importorskip("jax")
+    from repro.runtime.dag import RuntimeDag
+    fl = _jax_chain(3)
+    plan = build_pipeline(fusion=True, jit_fusion=True).run(
+        PhysicalPlan.from_dataflow(fl))
+    dag = RuntimeDag.from_plan(plan, "jitflow")
+    (node,) = dag.nodes.values()
+    assert node.jitted and node.resource_class == "gpu"
+    assert node.plan_op_id == plan.output_id
+
+
+def test_jitted_flow_through_runtime_matches_interpreted():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.runtime.netmodel import NetModel
+    from repro.runtime.runtime import Runtime
+
+    x = jnp.linspace(-1.0, 1.0, 513)
+    t = Table([("x", jax.Array)], [(x,)])
+    outs = {}
+    for jitted in (False, True):
+        rt = Runtime(n_cpu=1, n_gpu=1, net=NetModel(scale=0.0))
+        try:
+            fl = _jax_chain(3)
+            dep = fl.deploy(rt, fusion=True, jit_fusion=jitted)
+            if jitted:
+                assert any(n.jitted for n in dep.dag.nodes.values())
+            outs[jitted] = dep.execute(t).result(timeout=30)
+        finally:
+            rt.stop()
+    np.testing.assert_allclose(
+        np.asarray(outs[True].rows[0].values[0]),
+        np.asarray(outs[False].rows[0].values[0]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# hint preservation (fusion must compose with competitive execution)
+# ---------------------------------------------------------------------------
+
+def test_fusion_preserves_competitive_hints():
+    def a(x: int) -> int:
+        return x + 1
+
+    def b(x: int) -> int:
+        return x * 2
+
+    fl = Dataflow([("x", int)])
+    fl.output = fl.map(a, names=["x"]).map(b, names=["x"],
+                                           competitive_replicas=3)
+    fused = fuse_chains(fl)
+    (node,) = [n for n in fused.sorted_nodes() if n.op is not None]
+    assert isinstance(node.op, ops.Fuse)
+    assert node.op.competitive_replicas == 3     # hint survived fusion
+
+    rw = competitive(fused)
+    nodes = [n for n in rw.sorted_nodes() if n.op is not None]
+    anyofs = [n for n in nodes if isinstance(n.op, ops.AnyOf)]
+    assert len(anyofs) == 1 and len(anyofs[0].upstreams) == 3
+    out = rw.execute_local(Table([("x", int)], [(5,)]))
+    assert out.rows[0].values == (12,)
+
+
+def test_competitive_anyof_stays_off_the_accelerator_pool():
+    def a(x: int) -> int:
+        return x + 1
+
+    fl = Dataflow([("x", int)])
+    fl.output = fl.map(a, names=["x"], gpu=True, competitive_replicas=3)
+    plan = CompetitivePass().run(PhysicalPlan.from_dataflow(fl),
+                                 PassContext())
+    anyof = plan.output
+    assert anyof.wait_any and anyof.placement == "cpu"
+    assert all(plan.op(i).placement == "gpu" for i in anyof.inputs)
+
+
+def test_fusion_preserves_high_variance_flag():
+    def a(x: int) -> int:
+        return x + 1
+
+    fl = Dataflow([("x", int)])
+    fl.output = fl.map(a, names=["x"], high_variance=True).map(a, names=["x"])
+    plan = FuseChainsPass().run(PhysicalPlan.from_dataflow(fl), PassContext())
+    (op,) = plan.ops
+    assert op.high_variance and op.op.high_variance
+
+
+# ---------------------------------------------------------------------------
+# IR invariants + pass manager mechanics
+# ---------------------------------------------------------------------------
+
+def test_plan_validation_rejects_malformed_plans():
+    def a(x: int) -> int:
+        return x + 1
+
+    fl = Dataflow([("x", int)])
+    fl.output = fl.map(a, names=["x"])
+    plan = PhysicalPlan.from_dataflow(fl)
+    (op,) = plan.ops
+    with pytest.raises(PlanError):
+        plan.with_ops([op.replace(inputs=(99,))])          # unknown input
+    with pytest.raises(PlanError):
+        plan.with_ops([op, op])                            # duplicate id
+    with pytest.raises(PlanError):
+        plan.with_ops([op], output_id=42)                  # dangling output
+
+
+def test_pipeline_records_trace_and_typechecks():
+    fl = _jax_chain(3)
+    ctx = PassContext()
+    pipeline = PassPipeline([FuseChainsPass(), CompetitivePass(),
+                             LowerJaxChainsPass()])
+    plan = pipeline.run(PhysicalPlan.from_dataflow(fl), ctx)
+    assert [t.name for t in ctx.trace] == \
+        ["fuse-chains", "competitive", "lower-jax-chains"]
+    assert ctx.trace[0].ops_before == 3 and ctx.trace[0].ops_after == 1
+    plan.typecheck()                         # final plan is well-typed
+
+
+def test_broken_pass_fails_at_compile_time():
+    class BadPass:
+        name = "bad"
+
+        def run(self, plan, ctx):
+            (op,) = plan.ops[-1:]
+            return PhysicalPlan(plan.input_schema, plan.ops,
+                                output_id=op.op_id + 1000)
+
+    def a(x: int) -> int:
+        return x + 1
+
+    fl = Dataflow([("x", int)])
+    fl.output = fl.map(a, names=["x"])
+    with pytest.raises(PlanError):
+        PassPipeline([BadPass()]).run(PhysicalPlan.from_dataflow(fl))
+
+
+def test_ir_roundtrip_preserves_annotations():
+    def a(x: int) -> int:
+        return x + 1
+
+    fl = Dataflow([("x", int)])
+    fl.output = fl.map(a, names=["x"], gpu=True, batching=True,
+                       high_variance=True, competitive_replicas=2)
+    plan = PhysicalPlan.from_dataflow(fl)
+    (op,) = plan.ops
+    assert (op.placement, op.batching, op.high_variance, op.replicas) == \
+        ("gpu", True, True, 2)
+    back = plan.to_dataflow()
+    (node,) = [n for n in back.sorted_nodes() if n.op is not None]
+    assert node.op.resource_class == "gpu" and node.op.batching
+    assert node.op.high_variance and node.op.competitive_replicas == 2

@@ -24,8 +24,8 @@ SCRIPT = textwrap.dedent("""
 
     cfg = get_tiny_config("arctic-480b")
     cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # no drops -> exact
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     ax = AxisInfo(mesh=mesh, data=("data",), model="model")
     key = jax.random.PRNGKey(0)
     B, S, D = 4, 8, cfg.d_model

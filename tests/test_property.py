@@ -1,5 +1,13 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+``hypothesis`` is an optional dev dependency (see pyproject ``[project
+.optional-dependencies]``); skip the whole module when it is absent.
+"""
 import math
+
+import pytest
+
+pytest.importorskip("hypothesis")
 
 import hypothesis.strategies as st
 from hypothesis import given, settings

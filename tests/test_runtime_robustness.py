@@ -1,11 +1,14 @@
 """Runtime failure handling + additional property coverage."""
 import time
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.dataflow import Dataflow

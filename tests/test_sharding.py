@@ -54,7 +54,8 @@ def test_big_leaves_are_fully_sharded_for_train(arch):
     """ZeRO goal: every >=100M-param leaf must shard over both axes."""
     cfg, ax, params = _abstract_params(arch)
     specs = sh.param_pspecs(params, cfg, ax, mode="train")
-    flat = jax.tree.flatten_with_path(params)[0]
+    # jax.tree.flatten_with_path is missing in jax 0.4.x; use tree_util
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
     flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
     for (path, p), s in zip(flat, flat_s):
         if p.size < 100e6:
