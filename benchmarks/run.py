@@ -5,6 +5,12 @@ runtime benchmarks are modeled (single-host container) — see DESIGN.md §2;
 the validated claims are the relative effects from the paper's figures.
 
   PYTHONPATH=src python -m benchmarks.run [--only fusion,batching] [--fast]
+               [--json]
+
+``--json`` additionally writes machine-readable artifacts for suites that
+support it (currently ``batching`` -> ``BENCH_batching.json``: p50/p99
+latency, dispatches/row, batch-size histogram, executable-cache stats) so
+CI can track the perf trajectory across PRs.
 """
 from __future__ import annotations
 
@@ -22,6 +28,8 @@ def main() -> None:
                    help=f"comma list from {SUITES}")
     p.add_argument("--fast", action="store_true",
                    help="fewer requests per point")
+    p.add_argument("--json", action="store_true",
+                   help="write BENCH_<suite>.json artifacts (batching)")
     args = p.parse_args()
     only = set(args.only.split(",")) if args.only else set(SUITES)
 
@@ -51,7 +59,9 @@ def main() -> None:
         emit(locality.run(n_requests=10 if args.fast else 30))
     if "batching" in only:
         from benchmarks import batching
-        emit(batching.run(n_requests=16 if args.fast else 48))
+        emit(batching.run(n_requests=16 if args.fast else 48,
+                          json_path="BENCH_batching.json" if args.json
+                          else None))
     if "pipelines" in only:
         from benchmarks import pipelines
         emit(pipelines.run(n=8 if args.fast else 16))

@@ -31,7 +31,8 @@ _flow_ids = itertools.count()
 
 def compile_flow(flow: Dataflow, runtime, *, fusion: bool = False,
                  competitive_exec: bool = False, locality: bool = False,
-                 jit_fusion: bool = True, default_replicas: int = 3,
+                 jit_fusion: bool = True, batched_lowering: bool = True,
+                 default_replicas: int = 3,
                  pipeline: Optional[PassPipeline] = None,
                  name: Optional[str] = None) -> "DeployedFlow":
     """Compile + register ``flow``.  Pass either optimization flags (mapped
@@ -43,6 +44,7 @@ def compile_flow(flow: Dataflow, runtime, *, fusion: bool = False,
         pipeline = build_pipeline(
             fusion=fusion, competitive_exec=competitive_exec,
             locality=locality, jit_fusion=jit_fusion,
+            batched_lowering=batched_lowering,
             default_replicas=default_replicas)
     ctx = PassContext()
     plan = pipeline.run(plan, ctx)

@@ -48,6 +48,11 @@ class PhysicalOp:
     # locality / dynamic dispatch: resolved-ref column or constant key
     locality_ref_column: Optional[str] = None
     locality_const: Optional[str] = None
+    # batched execution (set by LowerJaxChainsPass): the op executes whole
+    # row batches in one vmapped XLA dispatch, padded to these row-count
+    # buckets (the runtime feeds merged request tables straight in)
+    batchable: bool = False
+    batch_buckets: Tuple[int, ...] = ()
 
     def replace(self, **kw) -> "PhysicalOp":
         return dataclasses.replace(self, **kw)
@@ -62,6 +67,8 @@ class PhysicalOp:
             flags.append(self.placement)
         if self.batching:
             flags.append("batch")
+        if self.batchable:
+            flags.append("vmap")
         if self.wait_any:
             flags.append("any")
         if self.replicas:

@@ -14,11 +14,27 @@ propagation, ``ops`` list) so every graph-level invariant still holds; only
 ``apply`` changes.  ``jax.jit`` compiles lazily on first call and re-uses
 the executable across rows and requests (shapes are stable in a serving
 pipeline, which is what makes this profitable).
+
+``BatchedJittedFuse`` goes one step further (paper §4 Batching, Fig 8): it
+stacks all rows of a table into device arrays and executes the whole chain
+as a single ``jax.vmap``-over-rows ``jax.jit`` dispatch per batch.  Row
+counts are padded up to power-of-two buckets so XLA recompiles are bounded
+(O(log max_batch) shapes per chain instead of one per batch size), and
+compiled executables live in a process-wide cache keyed on
+``(chain signature, bucket shapes, dtypes)`` so identical chains across
+re-registrations and plans reuse XLA programs instead of re-tracing.
+Ragged batches (rows whose arrays differ in shape) are split into
+shape-uniform groups — one dispatch per group — and anything that cannot
+be stacked or traced falls back to the per-row jitted / interpreted path.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, List, Optional, Tuple
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core import operators as ops
 from repro.core.table import Table
@@ -90,6 +106,7 @@ class JittedFuse(ops.Fuse):
         self._out_arity = len(self.ops[-1]._schema)
         self._fallback = False
         self._jit_succeeded = False
+        self.row_dispatches = 0     # jitted per-row XLA dispatches issued
 
     @property
     def name(self):
@@ -109,6 +126,7 @@ class JittedFuse(ops.Fuse):
         try:
             for r in t.rows:
                 out = self._jitted(*(jnp.asarray(v) for v in r.values))
+                self.row_dispatches += 1
                 if len(out) != self._out_arity:
                     raise ops.TypecheckError(
                         f"{self.name}: returned {len(out)} values, schema "
@@ -134,10 +152,279 @@ class JittedFuse(ops.Fuse):
         return out_t
 
 
-def lower_fuse(fuse: ops.Fuse) -> JittedFuse:
-    """Lower an interpreted ``Fuse`` into a ``JittedFuse`` (annotations are
-    the caller's job — this only swaps the execution strategy)."""
-    lowered = JittedFuse(list(fuse.ops))
+# ---------------------------------------------------------------------------
+# batched (vmap-over-rows) execution: shape buckets + executable cache
+# ---------------------------------------------------------------------------
+
+#: default row-count buckets: powers of two.  A batch of n rows is padded up
+#: to the smallest bucket >= n, bounding recompiles to O(log max_batch)
+#: distinct shapes per chain.
+DEFAULT_BUCKETS: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
+
+
+def bucket_rows(n: int, buckets: Tuple[int, ...] = DEFAULT_BUCKETS) -> int:
+    """Smallest bucket >= n; beyond the table, next power of two."""
+    for b in buckets:
+        if n <= b:
+            return b
+    b = buckets[-1] if buckets else 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def chain_signature(chain_ops: List[ops.Operator]) -> Tuple[Any, ...]:
+    """Identity of a fused chain: the tuple of its map functions.  Two
+    ``Fuse`` nodes built from the same function objects (the common case
+    across re-registrations of the same flow) share compiled executables;
+    redefining a function yields a new object and, correctly, a new entry."""
+    return tuple(m.fn for m in chain_ops)
+
+
+class ExecutableCache:
+    """Process-wide cache of compiled batched chain executables.
+
+    Entries are keyed on ``(chain signature, bucket shapes, dtypes)``.  All
+    entries for one chain share a single ``jax.jit(jax.vmap(composed))``
+    object (XLA specializes per shape under it); the explicit per-key
+    bookkeeping is what lets callers *observe* reuse: ``misses`` count new
+    (chain, shape, dtype) combinations, ``traces`` count actual re-traces
+    of the composed function — zero new traces for a repeated identical
+    chain is the cache's contract.
+    """
+
+    def __init__(self, max_chains: int = 128):
+        self._lock = threading.Lock()
+        self.max_chains = max_chains
+        # chain signature -> (jitted vmapped callable, trace counter box);
+        # insertion/access order maintained for LRU eviction — signatures
+        # hold the chain's fn objects, so an unbounded cache would pin
+        # every deploy-time closure (and its jitted executable) forever
+        self._fns: "collections.OrderedDict[Tuple, Tuple[Callable, List[int]]]" = \
+            collections.OrderedDict()
+        # (chain signature, shapes, dtypes) -> per-entry hit count
+        self._entries: Dict[Tuple, int] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def executable(self, sig: Tuple, fns: List[Callable],
+                   shapes: Tuple, dtypes: Tuple) -> Callable:
+        """The compiled callable for this (chain, bucket shapes, dtypes)."""
+        with self._lock:
+            rec = self._fns.get(sig)
+            if rec is None:
+                counter = [0]
+
+                def composed(*vals, _fns=tuple(fns), _counter=counter):
+                    # runs once per (re-)trace, never per compiled call
+                    _counter[0] += 1
+                    for fn in _fns:
+                        out = fn(*vals)
+                        vals = out if isinstance(out, tuple) else (out,)
+                    return vals
+
+                rec = (jax.jit(jax.vmap(composed)), counter)
+                self._fns[sig] = rec
+                while len(self._fns) > self.max_chains:
+                    old_sig, _ = self._fns.popitem(last=False)
+                    self._entries = {k: v for k, v in self._entries.items()
+                                     if k[0] != old_sig}
+                    self.evictions += 1
+            else:
+                self._fns.move_to_end(sig)
+            key = (sig, shapes, dtypes)
+            if key in self._entries:
+                self._entries[key] += 1
+                self.hits += 1
+            else:
+                self._entries[key] = 0
+                self.misses += 1
+            return rec[0]
+
+    def traces(self, sig: Optional[Tuple] = None) -> int:
+        """Total composed-fn traces (compilations), optionally per chain."""
+        with self._lock:
+            if sig is not None:
+                rec = self._fns.get(sig)
+                return rec[1][0] if rec else 0
+            return sum(c[0] for _, c in self._fns.values())
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"chains": len(self._fns), "entries": len(self._entries),
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions,
+                    "traces": sum(c[0] for _, c in self._fns.values())}
+
+    def clear(self):
+        with self._lock:
+            self._fns.clear()
+            self._entries.clear()
+            self.hits = self.misses = self.evictions = 0
+
+
+#: the process-wide cache: identical fused chains across plans and
+#: re-registrations reuse compiled XLA programs instead of re-tracing.
+EXECUTABLE_CACHE = ExecutableCache()
+
+
+@dataclasses.dataclass
+class BatchedJittedFuse(JittedFuse):
+    """A jitted fused chain executed as ONE vmapped dispatch per batch.
+
+    ``apply_batched`` stacks the table's rows into device arrays (padding
+    the row count up to a power-of-two bucket), looks up the compiled
+    executable in the process-wide ``EXECUTABLE_CACHE``, and issues a single
+    XLA dispatch for the whole batch.  Rows with heterogeneous array shapes
+    are split into shape-uniform groups (one dispatch each) — ragged dims
+    participate in the cache key, so recompiles stay bounded per distinct
+    shape.  ``apply`` delegates to the batched path, so even non-batching
+    nodes pay one dispatch per *table* instead of one per row; the per-row
+    jitted path and the interpreted ``Fuse`` path remain as fallbacks for
+    non-stackable values and non-traceable functions.
+    """
+    bucket_sizes: Tuple[int, ...] = DEFAULT_BUCKETS
+
+    def __post_init__(self):
+        super().__post_init__()
+        self._sig = chain_signature(self.ops)
+        self._batch_succeeded = False
+        self._vmap_fallback = False   # vmap untraceable; per-row jit works
+        # dispatch accounting (read by benchmarks and runtime metrics)
+        self.batch_dispatches = 0
+        self.rows_batched = 0
+
+    @property
+    def name(self):
+        return "vjit[" + ",".join(o.name for o in self.ops) + "]"
+
+    # -- batched execution ---------------------------------------------------
+    def _stack_groups(self, rows):
+        """Group rows by per-column (shape, dtype); returns
+        [(indices, [col arrays])] preserving original order within groups.
+        Values are materialized as host (numpy) arrays: stacking happens as
+        one memcpy + ONE device_put per column, instead of an n-arg XLA
+        concatenate whose dispatch costs about as much as the n per-row
+        calls the batching is meant to eliminate."""
+        groups: Dict[Tuple, Tuple[List[int], List[List[Any]]]] = {}
+        for i, r in enumerate(rows):
+            arrs = [np.asarray(v) for v in r.values]
+            key = tuple((a.shape, str(a.dtype)) for a in arrs)
+            idxs, cols = groups.setdefault(
+                key, ([], [[] for _ in arrs]))
+            idxs.append(i)
+            for c, a in zip(cols, arrs):
+                c.append(a)
+        return list(groups.values())
+
+    def apply_batched(self, tables: List[Table], ctx=None) -> Table:
+        if self._fallback:
+            return ops.Fuse.apply(self, tables, ctx)
+        if self._vmap_fallback:
+            return JittedFuse.apply(self, tables, ctx)
+        (t,) = tables
+        schema = self.out_schema([t.schema])
+        out_t = Table(schema, grouping=t.grouping)
+        if not t.rows:
+            return out_t
+        try:
+            groups = self._stack_groups(t.rows)
+        except Exception:
+            # non-array values slipped past the annotations: the batched
+            # path cannot stack them — per-row jitted path still applies
+            return JittedFuse.apply(self, tables, ctx)
+        out_rows: List[Any] = [None] * len(t.rows)
+        vmapped_any = False      # did a vmapped dispatch succeed THIS call?
+        try:
+            for idxs, cols in groups:
+                n = len(idxs)
+                if n == 1:
+                    # singleton fast-path: the per-row executable avoids the
+                    # stack/pad/device_get round-trip (measurably cheaper
+                    # below the batching crossover at ~8 rows)
+                    i = idxs[0]
+                    out = self._jitted(*(jnp.asarray(v)
+                                         for v in t.rows[i].values))
+                    self.row_dispatches += 1
+                    if len(out) != self._out_arity:
+                        raise ops.TypecheckError(
+                            f"{self.name}: returned {len(out)} values, "
+                            f"schema expects {self._out_arity}")
+                    self._jit_succeeded = True
+                    out_rows[i] = t.rows[i].replace(tuple(out))
+                    continue
+                bucket = bucket_rows(n, self.bucket_sizes)
+                # pad the row LIST (repeating row 0) before stacking, so
+                # stacked shapes are always bucket-sized — padding on device
+                # would compile a fresh XLA program per distinct n,
+                # defeating the bucketing entirely
+                stacked = [jnp.asarray(np.stack(c + c[:1] * (bucket - n)))
+                           for c in cols]
+                shapes = tuple(a.shape for a in stacked)
+                dtypes = tuple(str(a.dtype) for a in stacked)
+                fn = EXECUTABLE_CACHE.executable(
+                    self._sig, [m.fn for m in self.ops], shapes, dtypes)
+                outs = fn(*stacked)
+                if len(outs) != self._out_arity:
+                    raise ops.TypecheckError(
+                        f"{self.name}: returned {len(outs)} values, schema "
+                        f"expects {self._out_arity}")
+                self.batch_dispatches += 1
+                self.rows_batched += n
+                vmapped_any = True
+                # ONE host sync per batch: slicing a device array per row
+                # would issue n gather dispatches — as many as the per-row
+                # path — while numpy row views are free.  Downstream
+                # consumers (jnp ops, lowered chains) take ndarray
+                # transparently via jnp.asarray.
+                outs_host = jax.device_get(outs)
+                for j, i in enumerate(idxs):
+                    out_rows[i] = t.rows[i].replace(
+                        tuple(col[j] for col in outs_host))
+        except ops.TypecheckError:
+            raise
+        except (jax.errors.JAXTypeError, TypeError, NotImplementedError,
+                ValueError):
+            # latching policy mirrors the per-row path, but the two
+            # executables are judged separately: a chain can be jit-traceable
+            # per row yet fail under vmap (callbacks, batching-hostile
+            # primitives) — then the per-row executable keeps serving.
+            # Proven executables never latch; their errors are data errors.
+            if self._batch_succeeded and self._jit_succeeded:
+                raise
+            if self._jit_succeeded:
+                # per-row proven; the vmapped path is the suspect
+                self._vmap_fallback = True
+                return JittedFuse.apply(self, tables, ctx)
+            if self._batch_succeeded:
+                # vmap proven but the per-row (singleton) call failed:
+                # composed fn traced fine under vmap, so treat as data error
+                raise
+            self._fallback = True
+            return ops.Fuse.apply(self, tables, ctx)
+        if vmapped_any:
+            # a singleton-only table proves the per-row executable, not the
+            # vmapped one — conflating them would turn a later first vmap
+            # trace failure into a permanent request-time error
+            self._batch_succeeded = True
+        out_t.rows = out_rows
+        return out_t
+
+    def apply(self, tables: List[Table], ctx=None) -> Table:
+        return self.apply_batched(tables, ctx)
+
+
+def lower_fuse(fuse: ops.Fuse, *, batched: bool = False,
+               bucket_sizes: Tuple[int, ...] = DEFAULT_BUCKETS) -> JittedFuse:
+    """Lower an interpreted ``Fuse`` into a ``JittedFuse`` (or, with
+    ``batched=True``, a ``BatchedJittedFuse``).  Annotations are the
+    caller's job — this only swaps the execution strategy."""
+    if batched:
+        lowered: JittedFuse = BatchedJittedFuse(list(fuse.ops),
+                                                bucket_sizes=bucket_sizes)
+    else:
+        lowered = JittedFuse(list(fuse.ops))
     lowered.resource_class = fuse.resource_class
     lowered.batching = fuse.batching
     lowered.high_variance = fuse.high_variance

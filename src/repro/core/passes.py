@@ -31,7 +31,8 @@ from typing import Dict, List, Optional, Protocol, runtime_checkable
 
 from repro.core import operators as ops
 from repro.core.ir import SOURCE_ID, PhysicalOp, PhysicalPlan
-from repro.core.lowering import fuse_is_jax_lowerable, lower_fuse
+from repro.core.lowering import (DEFAULT_BUCKETS, fuse_is_jax_lowerable,
+                                 lower_fuse)
 
 
 @dataclasses.dataclass
@@ -272,8 +273,17 @@ class FuseLookupsPass:
 @dataclasses.dataclass
 class LowerJaxChainsPass:
     """Lower fused GPU-placed JAX map chains to single ``jax.jit``
-    callables — XLA fuses across operator boundaries, one dispatch/row."""
+    callables — XLA fuses across operator boundaries, one dispatch/row.
+
+    With ``batched=True`` (default) the chain is lowered to a
+    ``BatchedJittedFuse``: whole row batches execute as ONE vmapped XLA
+    dispatch, with row counts padded to ``bucket_sizes`` so recompiles are
+    bounded.  The op is annotated ``batchable`` with the chosen buckets so
+    the runtime feeds merged request tables straight into the batched
+    callable."""
     min_ops: int = 2
+    batched: bool = True
+    bucket_sizes: tuple = DEFAULT_BUCKETS
     name: str = dataclasses.field(default="lower-jax-chains", init=False)
 
     def run(self, plan: PhysicalPlan, ctx: PassContext) -> PhysicalPlan:
@@ -281,9 +291,15 @@ class LowerJaxChainsPass:
         lowered = 0
         for o in plan.ops:
             if fuse_is_jax_lowerable(o.op, o.placement, self.min_ops):
-                o = o.replace(op=lower_fuse(o.op))
+                lo = lower_fuse(o.op, batched=self.batched,
+                                bucket_sizes=tuple(self.bucket_sizes))
+                o = o.replace(op=lo, batchable=self.batched,
+                              batch_buckets=(tuple(self.bucket_sizes)
+                                             if self.batched else ()))
                 lowered += 1
-                ctx.note(f"%{o.op_id}: {len(o.op.ops)} maps -> 1 jitted fn")
+                kind = "vmap-batched" if self.batched else "per-row"
+                ctx.note(f"%{o.op_id}: {len(o.op.ops)} maps -> 1 jitted fn "
+                         f"({kind})")
             new_ops.append(o)
         if lowered:
             ctx.note(f"lowered {lowered} chains to XLA")
@@ -292,13 +308,15 @@ class LowerJaxChainsPass:
 
 def build_pipeline(*, fusion: bool = False, competitive_exec: bool = False,
                    locality: bool = False, jit_fusion: bool = True,
+                   batched_lowering: bool = True,
                    default_replicas: int = 3,
                    validate: bool = True) -> PassPipeline:
     """Map optimization flags (a planner ``Plan`` or user choices) onto a
     pass configuration.  Order mirrors the paper's rewrite order: locality
     first (lookup fusion feeds dispatch), then replication, then fusion
     (boundary-aware when locality is on), then XLA lowering of whatever
-    fusion produced."""
+    fusion produced (batched vmap-over-rows lowering unless
+    ``batched_lowering=False``)."""
     passes: List[Pass] = []
     if locality:
         passes.append(FuseLookupsPass())
@@ -307,5 +325,5 @@ def build_pipeline(*, fusion: bool = False, competitive_exec: bool = False,
     if fusion:
         passes.append(FuseChainsPass(preserve_lookup_boundaries=locality))
     if jit_fusion and fusion:
-        passes.append(LowerJaxChainsPass())
+        passes.append(LowerJaxChainsPass(batched=batched_lowering))
     return PassPipeline(passes, validate=validate)

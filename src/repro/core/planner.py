@@ -47,6 +47,7 @@ class Plan:
     profiles: Dict[int, OpProfile]
     notes: List[str]
     jit_fusion: bool = True             # lower fused JAX chains to XLA
+    batched_lowering: bool = True       # vmap whole row batches per dispatch
     default_replicas: int = 3
 
     @property
@@ -55,6 +56,7 @@ class Plan:
                 "competitive_exec": self.competitive_exec,
                 "locality": self.locality,
                 "jit_fusion": self.jit_fusion,
+                "batched_lowering": self.batched_lowering,
                 "default_replicas": self.default_replicas}
 
     def build_pipeline(self):
@@ -178,9 +180,23 @@ def make_plan(flow: Dataflow, sample: Table, *, net: Optional[NetModel] = None,
     if jit_fusion:
         notes.append(f"jit: {jit_edges} fusable gpu jax map edges are "
                      "XLA-lowerable after fusion")
+
+    # -- batched lowering: batch-hinted ops or multi-row requests benefit
+    # from ONE vmapped dispatch per batch; per-row lowering is kept for
+    # strictly single-row pipelines (no stacking overhead to pay)
+    has_batch_hint = any(n.op is not None and n.op.batching
+                         for n in flow.sorted_nodes())
+    batched_lowering = bool(jit_fusion
+                            and (has_batch_hint or len(sample.rows) > 1))
+    if jit_fusion:
+        notes.append("batched lowering: "
+                     + ("vmap over row batches (batch-hinted ops or "
+                        "multi-row sample)" if batched_lowering
+                        else "per-row (single-row pipeline, no batch hints)"))
     return Plan(fusion=fusion, competitive_exec=competitive_exec,
                 locality=locality, replicas=rep, profiles=profiles,
                 notes=notes, jit_fusion=jit_fusion,
+                batched_lowering=batched_lowering,
                 default_replicas=replicas)
 
 

@@ -228,7 +228,8 @@ def _mlp(x, mp_params, cfg):
 
 
 # ---------------------------------------------------------------------------
-def _apply_layer_full(x, lp, kind: str, cfg, ax, positions, build_cache):
+def _apply_layer_full(x, lp, kind: str, cfg, ax, positions, build_cache,
+                      cache_len=None):
     h = layers.apply_norm(x, lp["ln1"], cfg.norm)
     cache = {}
     if kind == "rec":
@@ -236,12 +237,26 @@ def _apply_layer_full(x, lp, kind: str, cfg, ax, positions, build_cache):
     else:
         y, k, v = _attn_full(h, lp["attn"], cfg, ax, positions)
         if build_cache:
-            S = x.shape[1]
-            W = min(cfg.sliding_window, S) if cfg.sliding_window else S
-            ks = jax.lax.dynamic_slice_in_dim(k, S - W, W, axis=1)
-            vs = jax.lax.dynamic_slice_in_dim(v, S - W, W, axis=1)
-            ps = jnp.broadcast_to(positions[S - W:], (x.shape[0], W))
-            cache = {"k": ks, "v": vs, "pos": ps.astype(jnp.int32)}
+            B, S = x.shape[0], x.shape[1]
+            # ring capacity must come from cache_len (matching init_cache),
+            # NOT the prefill length: with capacity == S the first decode
+            # step (slot = S % S = 0) evicts position 0's KV even when the
+            # attention window still covers it, skewing decode logits vs
+            # the full forward
+            cap = cache_len if cache_len else S
+            W = min(cfg.sliding_window, cap) if cfg.sliding_window else cap
+            keep = min(W, S)
+            # scatter kept keys to slot = position % W so decode's ring
+            # addressing overwrites the genuinely oldest entries
+            kept_pos = positions[S - keep:]
+            slots = kept_pos % W
+            ks = jnp.zeros((B, W) + k.shape[2:], k.dtype)
+            vs = jnp.zeros((B, W) + v.shape[2:], v.dtype)
+            ks = ks.at[:, slots].set(k[:, S - keep:])
+            vs = vs.at[:, slots].set(v[:, S - keep:])
+            ps = jnp.full((B, W), -1, jnp.int32)
+            ps = ps.at[:, slots].set(kept_pos.astype(jnp.int32))
+            cache = {"k": ks, "v": vs, "pos": ps}
     x = x + y
     h = layers.apply_norm(x, lp["ln2"], cfg.norm)
     x = x + _mlp(h, lp["mlp"], cfg)
@@ -277,7 +292,7 @@ def forward(params, tokens, cfg: ModelConfig, ax: Optional[AxisInfo], *,
         caches = {}
         for i, kind in enumerate(pattern):
             x, c = _apply_layer_full(x, bp[str(i)], kind, cfg, ax, positions,
-                                     build_cache)
+                                     build_cache, cache_len)
             caches[str(i)] = c
         return x, caches
 
@@ -286,7 +301,7 @@ def forward(params, tokens, cfg: ModelConfig, ax: Optional[AxisInfo], *,
     rest_caches = {}
     for j, kind in enumerate(rest):
         x, c = _apply_layer_full(x, params["rest"][str(j)], kind, cfg, ax,
-                                 positions, build_cache)
+                                 positions, build_cache, cache_len)
         rest_caches[str(j)] = c
     x = layers.apply_norm(x, params["final_norm"], cfg.norm)
     logits = layers.unembed(x, params["embed"],

@@ -29,6 +29,10 @@ class RuntimeNode:
     batching: bool = False
     wait_any: bool = False
     jitted: bool = False
+    # batched execution: (merged_table_list, ctx) -> Table, ONE vmapped XLA
+    # dispatch per batch (set when the op lowered to a BatchedJittedFuse)
+    batched_fn: Optional[Callable[[List[Table], Any], Table]] = None
+    batch_buckets: tuple = ()
     # dynamic dispatch: column holding the resolved KVS ref (or a constant)
     locality_ref_column: Optional[str] = None
     locality_const: Optional[str] = None
@@ -44,11 +48,16 @@ class RuntimeDag:
     @classmethod
     def from_plan(cls, plan, dag_name: str) -> "RuntimeDag":
         """Lower a ``repro.core.ir.PhysicalPlan`` to a runtime DAG."""
-        from repro.core.lowering import JittedFuse
+        from repro.core.lowering import BatchedJittedFuse, JittedFuse
 
         def wrap(op):
             def fn(tables, ctx):
                 return op.apply(tables, ctx)
+            return fn
+
+        def wrap_batched(op):
+            def fn(tables, ctx):
+                return op.apply_batched(tables, ctx)
             return fn
 
         nodes: Dict[str, RuntimeNode] = {}
@@ -57,6 +66,7 @@ class RuntimeDag:
         for o in plan.ops:
             nm = f"{dag_name}/{o.op_id}:{o.op.name}"[:120]
             names[o.op_id] = nm
+            batched = isinstance(o.op, BatchedJittedFuse)
             nodes[nm] = RuntimeNode(
                 name=nm, fn=wrap(o.op),
                 deps=[names[i] for i in o.inputs if i in names],
@@ -64,6 +74,8 @@ class RuntimeDag:
                 batching=o.batching,
                 wait_any=o.wait_any,
                 jitted=isinstance(o.op, JittedFuse),
+                batched_fn=wrap_batched(o.op) if batched else None,
+                batch_buckets=tuple(o.batch_buckets),
                 locality_ref_column=o.locality_ref_column,
                 locality_const=o.locality_const,
                 plan_op_id=o.op_id,

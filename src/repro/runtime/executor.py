@@ -28,6 +28,11 @@ class WorkItem:
     produced_on: List[Optional[str]]     # executor id per input (for net cost)
     callback: Callable                   # callback(result|None, error|None, executor_id)
     enqueue_t: float = dataclasses.field(default_factory=time.perf_counter)
+    # filled in by the executor before the callback fires — the per-stage
+    # profile hook (queueing delay vs pure execution time) a batch-aware
+    # planner needs (InferLine-style batch latency profiles)
+    queue_s: Optional[float] = None
+    exec_s: Optional[float] = None
 
 
 class ExecutionContext:
@@ -73,6 +78,8 @@ class Executor:
             except queue.Empty:
                 continue
             self.busy = True
+            t_start = time.perf_counter()
+            item.queue_s = t_start - item.enqueue_t
             try:
                 self.net.charge_invoke()   # FaaS invocation overhead
                 # charge network for inputs shipped from other executors
@@ -81,8 +88,10 @@ class Executor:
                         self.net.charge(nbytes(t))
                 ctx = ExecutionContext(self)
                 result = item.fn(item.tables, ctx)
+                item.exec_s = time.perf_counter() - t_start
                 item.callback(result, None, self.id)
             except BaseException as e:
+                item.exec_s = time.perf_counter() - t_start
                 item.callback(None, e, self.id)
             finally:
                 self.busy = False

@@ -43,6 +43,7 @@ class Runtime:
         self.max_batch = max_batch
         self.batch_wait_ms = batch_wait_ms
         self._batchers: Dict[str, Batcher] = {}
+        self._batchers_lock = threading.Lock()
         self._retired_batchers: List[Batcher] = []
         self._rng = random.Random(seed)
         self.metrics: Dict[str, List[float]] = {}
@@ -58,10 +59,11 @@ class Runtime:
         if old is not None:
             # detach the old deployment's batchers: their closures captured
             # the old nodes, but they must still drain in-flight requests
-            for node_name in old.nodes:
-                b = self._batchers.pop(node_name, None)
-                if b is not None:
-                    self._retired_batchers.append(b)
+            with self._batchers_lock:
+                for node_name in old.nodes:
+                    b = self._batchers.pop(node_name, None)
+                    if b is not None:
+                        self._retired_batchers.append(b)
         # close retired batchers that have drained (bounds thread leakage
         # across repeated re-registrations)
         still_draining = []
@@ -101,56 +103,126 @@ class Runtime:
                  produced_on: List[Optional[str]], callback,
                  locality_key: Optional[str] = None):
         if node.batching:
-            self._dispatch_batched(node, tables, produced_on, callback)
+            self._dispatch_batched(node, tables, produced_on, callback,
+                                   locality_key)
             return
         ex = self.pick_executor(node, locality_key)
         ex.submit(WorkItem(fn=node.fn, tables=tables,
                            produced_on=produced_on, callback=callback))
 
+    def record_metric(self, key: str, value: float):
+        self.metrics.setdefault(key, []).append(value)
+
     def _dispatch_batched(self, node: RuntimeNode, tables, produced_on,
-                          callback):
-        b = self._batchers.get(node.name)
-        if b is None:
-            def batched(arg_list):
-                # merge all request tables into one invocation (paper §4)
-                merged: List[Table] = [t for (ts, _) in arg_list
-                                       for t in ts]
-                ex = self.pick_executor(node)
-                done = threading.Event()
-                holder: Dict[str, Any] = {}
+                          callback, locality_key: Optional[str] = None):
+        """Queue one request into the node's batcher.  The batch function
+        issues ONE executor submission per batch — a single vmapped XLA
+        dispatch when the node lowered to a ``BatchedJittedFuse``
+        (``node.batched_fn``) — and demultiplexes results back to each
+        request's callback from the executor callback (no per-request
+        waiter threads)."""
+        with self._batchers_lock:
+            # creation must be atomic: two concurrent first-dispatches used
+            # to each build a Batcher, and the loser's requests ran outside
+            # the shared queue (phantom batches, skewed histograms)
+            b = self._batchers.get(node.name)
+            if b is None:
+                b = Batcher(self._make_batch_fn(node),
+                            max_batch=self.max_batch,
+                            max_wait_ms=self.batch_wait_ms)
+                self._batchers[node.name] = b
+        try:
+            b.submit((tables, produced_on, callback, locality_key))
+        except RuntimeError as e:       # closed under our feet (stop())
+            callback(None, e, None)
 
-                def cb(result, error, exec_id):
-                    holder["r"], holder["e"] = result, error
-                    done.set()
-
-                big = merged[0].with_rows(
-                    [r for t in merged for r in t.rows])
-                ex.submit(WorkItem(fn=node.fn, tables=[big],
-                                   produced_on=[None], callback=cb))
-                done.wait()
-                if holder.get("e"):
-                    raise holder["e"]
-                result: Table = holder["r"]
-                # demultiplex by row id
-                outs = []
-                for ts, _ in arg_list:
-                    ids = {r.row_id for t in ts for r in t.rows}
-                    outs.append(result.with_rows(
-                        [r for r in result.rows if r.row_id in ids]))
-                return outs
-
-            b = Batcher(batched, max_batch=self.max_batch,
-                        max_wait_ms=self.batch_wait_ms)
-            self._batchers[node.name] = b
-
-        def waiter():
+    def _make_batch_fn(self, node: RuntimeNode):
+        def batched(arg_list):
+            # merge all request tables into one invocation (paper §4)
+            live = []
+            for entry in arg_list:
+                ts, po, cb, lk = entry
+                if not ts:
+                    # a request with no input tables can't join the merge;
+                    # fail it alone instead of crashing the whole batch
+                    cb(None, ValueError(
+                        f"{node.name}: batched dispatch needs >=1 table"),
+                        None)
+                else:
+                    live.append(entry)
+            if not live:
+                return [None] * len(arg_list)
             try:
-                r = b.call((tables, produced_on))
-                callback(r, None, None)
+                # template carries schema/grouping; zero total rows is fine
+                # — the fn sees an empty table, returns an empty result
+                template = live[0][0][0]
+                big = template.with_rows(
+                    [r for ts, _, _, _ in live for t in ts for r in t.rows])
+                # locality: any request's resolved ref steers the whole
+                # batch (members share the node, hence typically the ref)
+                lk = next((k for _, _, _, k in live if k is not None), None)
+                ex = self.pick_executor(node, lk)
             except BaseException as e:
-                callback(None, e, None)
+                # nobody waits on the Batcher items — errors must reach the
+                # per-request callbacks, not die in the batch thread
+                for _, _, cb, _ in live:
+                    try:
+                        cb(None, e, None)
+                    except BaseException:
+                        pass
+                return [None] * len(arg_list)
+            fn = node.batched_fn or node.fn
+            t_submit = time.perf_counter()
+            item = WorkItem(fn=fn, tables=[big], produced_on=[None],
+                            callback=None)
 
-        threading.Thread(target=waiter, daemon=True).start()
+            def demux(result, error, exec_id):
+                lat = time.perf_counter() - t_submit
+                self.record_metric(f"batch/{node.name}/size", len(big.rows))
+                self.record_metric(f"batch/{node.name}/latency_s", lat)
+                if item.exec_s is not None:
+                    self.record_metric(f"batch/{node.name}/exec_s",
+                                       item.exec_s)
+                if error is not None:
+                    for _, _, cb, _ in live:
+                        cb(None, error, exec_id)
+                    return
+                # demultiplex: positionally when the fn preserved row count
+                # (maps/jitted chains — exact even when requests share
+                # row_ids), else by row id with multiset semantics (each
+                # result row consumed once, so duplicate ids are neither
+                # duplicated nor dropped; absent ids = filtered rows)
+                positional = len(result.rows) == len(big.rows)
+                by_id: Dict[Any, List] = {}
+                if not positional:
+                    for r in result.rows:
+                        by_id.setdefault(r.row_id, []).append(r)
+                pos = 0
+                for ts, _, cb, _ in live:
+                    out_rows = []
+                    for t in ts:
+                        for r0 in t.rows:
+                            if positional:
+                                out_rows.append(result.rows[pos])
+                                pos += 1
+                            else:
+                                bucket = by_id.get(r0.row_id)
+                                if bucket:
+                                    out_rows.append(bucket.pop(0))
+                    try:
+                        cb(result.with_rows(out_rows), None, exec_id)
+                    except BaseException as e:
+                        # a broken callback must not starve its siblings
+                        try:
+                            cb(None, e, exec_id)
+                        except BaseException:
+                            pass
+
+            item.callback = demux
+            ex.submit(item)
+            return [None] * len(arg_list)
+
+        return batched
 
     # -- execution ----------------------------------------------------------------
     def call_dag(self, name: str, table: Table) -> Future:
@@ -161,7 +233,9 @@ class Runtime:
 
     def stop(self):
         self.pool.stop()
-        for b in list(self._batchers.values()) + self._retired_batchers:
+        with self._batchers_lock:
+            batchers = list(self._batchers.values()) + self._retired_batchers
+        for b in batchers:
             b.close()
 
 

@@ -40,13 +40,17 @@ class Batcher:
         self.max_wait = max_wait_ms / 1000.0
         self.q: "queue.Queue[BatchItem]" = queue.Queue()
         self._stop = False
+        self._lock = threading.Lock()       # serializes submit vs close
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
         self.batch_sizes: List[int] = []
 
     def submit(self, args) -> BatchItem:
         item = BatchItem(args)
-        self.q.put(item)
+        with self._lock:
+            if self._stop:
+                raise RuntimeError("batcher is closed")
+            self.q.put(item)
         return item
 
     def call(self, args, timeout: Optional[float] = 30.0):
@@ -85,5 +89,22 @@ class Batcher:
                 it.event.set()
 
     def close(self):
-        self._stop = True
+        """Stop the batch thread and fail anything still queued.
+
+        ``submit``/``close`` are serialized by ``_lock``: after close wins
+        the race, concurrent submitters get an immediate ``RuntimeError``
+        instead of a silently dropped item, and items enqueued before the
+        close are drained with an error so no waiter sits out its full
+        ``call`` timeout."""
+        with self._lock:
+            if self._stop:
+                return
+            self._stop = True
         self._thread.join(timeout=1.0)
+        while True:
+            try:
+                it = self.q.get_nowait()
+            except queue.Empty:
+                break
+            it.error = RuntimeError("batcher closed before dispatch")
+            it.event.set()
