@@ -9,8 +9,11 @@ the validated claims are the relative effects from the paper's figures.
 
 ``--json`` additionally writes machine-readable artifacts for suites that
 support it (currently ``batching`` -> ``BENCH_batching.json``: p50/p99
-latency, dispatches/row, batch-size histogram, executable-cache stats) so
-CI can track the perf trajectory across PRs.
+latency, dispatches/row, batch-size histogram, executable-cache stats,
+plus the ``device_resident`` section — per-stage host-copy counts for the
+staged vs device-resident 3-node chain, the learned per-chain crossover
+table, and the filter-in-jit equivalence check) so CI can track the perf
+trajectory across PRs.
 """
 from __future__ import annotations
 

@@ -53,6 +53,11 @@ class PhysicalOp:
     # buckets (the runtime feeds merged request tables straight in)
     batchable: bool = False
     batch_buckets: Tuple[int, ...] = ()
+    # device residency (set by LowerJaxChainsPass): the op can consume and
+    # produce device-resident columnar batches (DeviceTable) — the runtime
+    # lowering wires adjacent device-resident ops so batches skip the host
+    # round-trip between them
+    device_resident: bool = False
 
     def replace(self, **kw) -> "PhysicalOp":
         return dataclasses.replace(self, **kw)
@@ -69,6 +74,8 @@ class PhysicalOp:
             flags.append("batch")
         if self.batchable:
             flags.append("vmap")
+        if self.device_resident:
+            flags.append("dev")
         if self.wait_any:
             flags.append("any")
         if self.replicas:

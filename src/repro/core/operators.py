@@ -15,6 +15,8 @@ import dataclasses
 import typing
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.table import Row, Table, Schema, schema_compatible
 
 AGG_FNS = ("count", "sum", "min", "max", "avg")
@@ -152,10 +154,19 @@ class Filter(Operator):
         rows = []
         for r in t.rows:
             keep = self.fn(*r.values)
+            # accept scalar boolean *arrays* too (numpy / jax 0-d bools):
+            # an array-typed predicate like ``x.sum() > 0`` returns one,
+            # and the jit-lowered masked path evaluates the same fn — the
+            # interpreted oracle must agree with it
             if not isinstance(keep, bool):
-                raise TypecheckError(
-                    f"filter {self.fn.__name__} returned non-bool "
-                    f"{type(keep).__name__}")
+                dtype = getattr(keep, "dtype", None)
+                if dtype is not None and dtype == np.bool_ and \
+                        getattr(keep, "ndim", None) == 0:
+                    keep = bool(keep)
+                else:
+                    raise TypecheckError(
+                        f"filter {self.fn.__name__} returned non-bool "
+                        f"{type(keep).__name__}")
             if keep:
                 rows.append(r)
         return t.with_rows(rows)

@@ -32,7 +32,7 @@ from typing import Dict, List, Optional, Protocol, runtime_checkable
 from repro.core import operators as ops
 from repro.core.ir import SOURCE_ID, PhysicalOp, PhysicalPlan
 from repro.core.lowering import (DEFAULT_BUCKETS, fuse_is_jax_lowerable,
-                                 lower_fuse)
+                                 lower_fuse, op_is_jax_lowerable)
 
 
 @dataclasses.dataclass
@@ -272,15 +272,24 @@ class FuseLookupsPass:
 
 @dataclasses.dataclass
 class LowerJaxChainsPass:
-    """Lower fused GPU-placed JAX map chains to single ``jax.jit``
+    """Lower fused GPU-placed JAX map/filter chains to single ``jax.jit``
     callables — XLA fuses across operator boundaries, one dispatch/row.
+    ``Filter`` members lower as boolean masking inside the jitted body
+    (rows compact only at the device->host boundary), so filter-containing
+    chains fuse instead of breaking the chain.
 
     With ``batched=True`` (default) the chain is lowered to a
     ``BatchedJittedFuse``: whole row batches execute as ONE vmapped XLA
     dispatch, with row counts padded to ``bucket_sizes`` so recompiles are
-    bounded.  The op is annotated ``batchable`` with the chosen buckets so
-    the runtime feeds merged request tables straight into the batched
-    callable."""
+    bounded.  The op is annotated ``batchable`` + ``device_resident`` with
+    the chosen buckets, so the runtime feeds merged request tables straight
+    into the batched callable and keeps batches device-resident across
+    adjacent lowered nodes.
+
+    With ``min_ops <= 1`` bare (un-fused) GPU maps/filters lower too —
+    that is what turns a multi-node accelerator chain the fusion pass left
+    split (different batching hints, fan-out boundaries) into a
+    device-resident pipeline."""
     min_ops: int = 2
     batched: bool = True
     bucket_sizes: tuple = DEFAULT_BUCKETS
@@ -290,15 +299,27 @@ class LowerJaxChainsPass:
         new_ops = []
         lowered = 0
         for o in plan.ops:
+            target = None
             if fuse_is_jax_lowerable(o.op, o.placement, self.min_ops):
-                lo = lower_fuse(o.op, batched=self.batched,
+                target = o.op
+            elif (self.min_ops <= 1 and o.placement == "gpu"
+                    and not isinstance(o.op, ops.Fuse)
+                    and op_is_jax_lowerable(o.op)):
+                target = ops.Fuse([o.op])
+                target.resource_class = o.placement
+                target.batching = o.batching
+                target.high_variance = o.high_variance
+                target.competitive_replicas = o.replicas
+            if target is not None:
+                lo = lower_fuse(target, batched=self.batched,
                                 bucket_sizes=tuple(self.bucket_sizes))
                 o = o.replace(op=lo, batchable=self.batched,
                               batch_buckets=(tuple(self.bucket_sizes)
-                                             if self.batched else ()))
+                                             if self.batched else ()),
+                              device_resident=self.batched)
                 lowered += 1
                 kind = "vmap-batched" if self.batched else "per-row"
-                ctx.note(f"%{o.op_id}: {len(o.op.ops)} maps -> 1 jitted fn "
+                ctx.note(f"%{o.op_id}: {len(o.op.ops)} ops -> 1 jitted fn "
                          f"({kind})")
             new_ops.append(o)
         if lowered:

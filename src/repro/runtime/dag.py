@@ -4,13 +4,20 @@ analogue).
 Each node is a named function over Tables with scheduling annotations:
 ``resource_class`` (cpu/gpu executor pools), ``batching`` (batch-aware fn),
 ``wait_any`` (wait-for-any semantics for anyof), ``jitted`` (the node's fn
-is a single XLA-compiled callable), and the locality refs — the
-*to-be-continued* annotation for dynamic dispatch: the node's result carries
-a resolved KVS ref and the scheduler places the continuation DAG on a
-machine likely caching that ref (paper §4).
+is a single XLA-compiled callable), the device-residency flags, and the
+locality refs — the *to-be-continued* annotation for dynamic dispatch: the
+node's result carries a resolved KVS ref and the scheduler places the
+continuation DAG on a machine likely caching that ref (paper §4).
 
 ``RuntimeDag.from_plan`` is the lowering from the physical-plan IR: one
-``RuntimeNode`` per ``PhysicalOp``, annotations copied verbatim.
+``RuntimeNode`` per ``PhysicalOp``, annotations copied verbatim — plus the
+device-edge analysis: a device-resident op whose consumers are ALL
+device-resident (single-input, not wait-any, not request-batching) *emits*
+a ``DeviceTable`` instead of gathering back to the host, so a chain of
+adjacent accelerator nodes pays one host->device stack at entry and one
+gather at the demux boundary.  When such an op has exactly one consumer its
+output buffers are marked donatable — the consumer's executable hands them
+to XLA (``donate_argnums``) and the next batch reuses the allocation.
 """
 from __future__ import annotations
 
@@ -33,6 +40,11 @@ class RuntimeNode:
     # dispatch per batch (set when the op lowered to a BatchedJittedFuse)
     batched_fn: Optional[Callable[[List[Table], Any], Table]] = None
     batch_buckets: tuple = ()
+    # device residency: the op consumes/produces DeviceTables; emits_device
+    # means its output actually stays on the device (every consumer is a
+    # device-resident op), skipping the host gather at this edge
+    device_resident: bool = False
+    emits_device: bool = False
     # dynamic dispatch: column holding the resolved KVS ref (or a constant)
     locality_ref_column: Optional[str] = None
     locality_const: Optional[str] = None
@@ -46,18 +58,28 @@ class RuntimeDag:
     output: str
 
     @classmethod
-    def from_plan(cls, plan, dag_name: str) -> "RuntimeDag":
-        """Lower a ``repro.core.ir.PhysicalPlan`` to a runtime DAG."""
+    def from_plan(cls, plan, dag_name: str, *,
+                  device_resident: bool = True) -> "RuntimeDag":
+        """Lower a ``repro.core.ir.PhysicalPlan`` to a runtime DAG.
+        ``device_resident=False`` disables the device-edge analysis (every
+        node gathers back to the host — the pre-device-pipeline behavior,
+        kept for benchmarking the difference)."""
         from repro.core.lowering import BatchedJittedFuse, JittedFuse
+
+        consumers: Dict[int, List] = {}
+        for o in plan.ops:
+            for i in o.inputs:
+                consumers.setdefault(i, []).append(o)
 
         def wrap(op):
             def fn(tables, ctx):
                 return op.apply(tables, ctx)
             return fn
 
-        def wrap_batched(op):
+        def wrap_device(op, emits, donate):
             def fn(tables, ctx):
-                return op.apply_batched(tables, ctx)
+                return op.apply_batched(tables, ctx, emit_device=emits,
+                                        donate_out=donate)
             return fn
 
         nodes: Dict[str, RuntimeNode] = {}
@@ -67,15 +89,31 @@ class RuntimeDag:
             nm = f"{dag_name}/{o.op_id}:{o.op.name}"[:120]
             names[o.op_id] = nm
             batched = isinstance(o.op, BatchedJittedFuse)
+            dev = batched and bool(getattr(o, "device_resident", False))
+            cons = consumers.get(o.op_id, [])
+            # emit a DeviceTable only when every consumer can take it
+            # straight off the device: a device-resident single-input op
+            # that neither races (wait-any) nor merges requests on the
+            # host (batching); the plan output always gathers
+            emits = (device_resident and dev and bool(cons)
+                     and o.op_id != plan.output_id
+                     and all(getattr(c, "device_resident", False)
+                             and not c.wait_any and not c.batching
+                             and len(c.inputs) == 1 for c in cons))
+            # sole consumer -> nobody else holds the buffers: donate them
+            donate = emits and len(cons) == 1
+            fn = wrap_device(o.op, emits, donate) if batched else wrap(o.op)
             nodes[nm] = RuntimeNode(
-                name=nm, fn=wrap(o.op),
+                name=nm, fn=fn,
                 deps=[names[i] for i in o.inputs if i in names],
                 resource_class=o.placement,
                 batching=o.batching,
                 wait_any=o.wait_any,
                 jitted=isinstance(o.op, JittedFuse),
-                batched_fn=wrap_batched(o.op) if batched else None,
+                batched_fn=fn if batched else None,
                 batch_buckets=tuple(o.batch_buckets),
+                device_resident=dev,
+                emits_device=emits,
                 locality_ref_column=o.locality_ref_column,
                 locality_const=o.locality_const,
                 plan_op_id=o.op_id,

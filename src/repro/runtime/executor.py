@@ -131,6 +131,10 @@ class ExecutorPool:
             return [e for e in self.executors.values()
                     if e.resource_class == resource_class]
 
+    def by_id(self, executor_id: str) -> Optional[Executor]:
+        with self._lock:
+            return self.executors.get(executor_id)
+
     def candidates(self, fname: str, resource_class: str) -> List[Executor]:
         with self._lock:
             ids = self.assignment.get(fname)

@@ -18,7 +18,8 @@ import time
 from concurrent.futures import Future
 from typing import Any, Dict, List, Optional
 
-from repro.core.table import Table
+from repro.core.lowering import DEFAULT_BUCKETS, bucket_rows
+from repro.core.table import DeviceTable, Table
 from repro.runtime.dag import RuntimeDag, RuntimeNode
 from repro.runtime.executor import ExecutorPool, WorkItem
 from repro.runtime.kvs import KVS
@@ -106,7 +107,18 @@ class Runtime:
             self._dispatch_batched(node, tables, produced_on, callback,
                                    locality_key)
             return
-        ex = self.pick_executor(node, locality_key)
+        # a device-resident input lives in its producer's accelerator
+        # memory: the consumer MUST run there — shipping the batch to
+        # another executor would be exactly the host round-trip (or
+        # cross-device copy) the residency analysis eliminated, and would
+        # invalidate buffer donation
+        ex = None
+        for t, src in zip(tables, produced_on):
+            if isinstance(t, DeviceTable) and src is not None:
+                ex = self.pool.by_id(src)
+                break
+        if ex is None:
+            ex = self.pick_executor(node, locality_key)
         ex.submit(WorkItem(fn=node.fn, tables=tables,
                            produced_on=produced_on, callback=callback))
 
@@ -186,6 +198,45 @@ class Runtime:
                 if error is not None:
                     for _, _, cb, _ in live:
                         cb(None, error, exec_id)
+                    return
+                if isinstance(result, DeviceTable):
+                    # device-resident demux: the batch stays on the
+                    # accelerator — each request gets a device-side slice
+                    # (row positions are preserved through the vmapped
+                    # chain; fused filters only flip mask bits), re-padded
+                    # to its bucket so downstream executables keep hitting
+                    # cached shapes.  No host copy happens here.
+                    buckets = node.batch_buckets or DEFAULT_BUCKETS
+                    pos = 0
+                    for ts, _, cb, _ in live:
+                        k = sum(len(t.rows) for t in ts)
+                        span = range(pos, pos + k)
+                        pos += k
+                        try:
+                            if k == 0:
+                                part: Any = Table(result.schema,
+                                                  grouping=result.grouping)
+                            elif len(live) == 1 and k == result.nrows:
+                                # single request spanning the whole batch
+                                # (the sparse-traffic norm): nothing to
+                                # slice — forward the result as-is
+                                part = result
+                            else:
+                                part = result.take(
+                                    span, pad_to=bucket_rows(k, buckets))
+                            if isinstance(part, DeviceTable):
+                                # the part inherits the producer's
+                                # consumer-count analysis: with fan-out
+                                # downstream, the same part reaches every
+                                # consumer — donating it would delete
+                                # buffers a sibling still needs
+                                part.donatable = result.donatable
+                            cb(part, None, exec_id)
+                        except BaseException as e:
+                            try:
+                                cb(None, e, exec_id)
+                            except BaseException:
+                                pass
                     return
                 # demultiplex: positionally when the fn preserved row count
                 # (maps/jitted chains — exact even when requests share
@@ -281,8 +332,12 @@ class _DagExecution:
                 to_run.append((node, tables, srcs))
         for node, tables, srcs in to_run:
             locality_key = node.locality_const
-            if node.locality_ref_column is not None and tables:
+            if node.locality_ref_column is not None and tables \
+                    and isinstance(tables[0], Table):
                 # dynamic dispatch: resolved ref from the upstream's output
+                # (device-resident upstreams keep values on the accelerator
+                # — reading a ref back would defeat the residency, and
+                # device chains never carry lookup refs anyway)
                 t = tables[0]
                 try:
                     idx = t.column_index(node.locality_ref_column)

@@ -31,16 +31,31 @@ class Batcher:
     ``fn`` maps a list of per-request arg dicts to a list of results (it is
     responsible for stacking/padding).  ``max_batch`` bounds the bucket
     (paper default: 10); ``max_wait_ms`` bounds queueing delay.
+
+    The wait deadline is *adaptive*: an EWMA of recent inter-arrival gaps
+    decides how much of ``max_wait`` is actually worth spending.  Under
+    dense traffic (gaps well inside the window) the full window is used and
+    requests coalesce; under sparse traffic the wait shrinks toward zero —
+    a lone request should not sit out the whole window when the expected
+    next arrival lies beyond it.  ``adaptive_wait=False`` restores the
+    fixed-deadline behavior.
     """
 
+    #: EWMA smoothing for inter-arrival gaps.
+    GAP_ALPHA = 0.3
+
     def __init__(self, fn: Callable[[List[Any]], List[Any]], *,
-                 max_batch: int = 10, max_wait_ms: float = 2.0):
+                 max_batch: int = 10, max_wait_ms: float = 2.0,
+                 adaptive_wait: bool = True):
         self.fn = fn
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1000.0
+        self.adaptive_wait = adaptive_wait
         self.q: "queue.Queue[BatchItem]" = queue.Queue()
         self._stop = False
         self._lock = threading.Lock()       # serializes submit vs close
+        self._gap_ewma: Optional[float] = None
+        self._last_submit_t: Optional[float] = None
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
         self.batch_sizes: List[int] = []
@@ -50,8 +65,33 @@ class Batcher:
         with self._lock:
             if self._stop:
                 raise RuntimeError("batcher is closed")
+            if self._last_submit_t is not None:
+                # clamp the sample: beyond ~4 windows a gap is just "idle",
+                # and folding a minutes-long pause into the EWMA would pin
+                # the wait at zero for dozens of requests into the next
+                # dense burst (clamped, recovery takes ~3 samples)
+                gap = min(item.enqueue_t - self._last_submit_t,
+                          4.0 * self.max_wait)
+                self._gap_ewma = gap if self._gap_ewma is None else \
+                    ((1.0 - self.GAP_ALPHA) * self._gap_ewma
+                     + self.GAP_ALPHA * gap)
+            self._last_submit_t = item.enqueue_t
             self.q.put(item)
         return item
+
+    def effective_wait(self) -> float:
+        """How long the batch loop holds a partial batch open.  Arrivals
+        expected WITHIN the window keep the full window (so every merge
+        the fixed deadline achieved still happens); beyond it the wait
+        shrinks linearly, reaching zero at twice the window — a lone
+        request during sparse traffic fires immediately."""
+        if not self.adaptive_wait:
+            return self.max_wait
+        with self._lock:
+            gap = self._gap_ewma
+        if gap is None or gap <= self.max_wait:
+            return self.max_wait
+        return max(0.0, 2.0 * self.max_wait - gap)
 
     def call(self, args, timeout: Optional[float] = 30.0):
         item = self.submit(args)
@@ -68,7 +108,7 @@ class Batcher:
             except queue.Empty:
                 continue
             items = [first]
-            deadline = time.perf_counter() + self.max_wait
+            deadline = time.perf_counter() + self.effective_wait()
             while len(items) < self.max_batch:
                 remaining = deadline - time.perf_counter()
                 if remaining <= 0:

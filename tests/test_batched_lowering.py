@@ -274,6 +274,220 @@ def test_runtime_dag_carries_batched_fn():
     assert len(out) == 3
 
 
+# ---------------------------------------------------------------------------
+# Filter-in-jit lowering (boolean masking inside the jitted body)
+# ---------------------------------------------------------------------------
+
+def _pos(x: jax.Array) -> bool:
+    return x.sum() > 0
+
+
+def _filter_chain():
+    fl = Dataflow([("x", jax.Array)])
+    fl.output = fl.map(_f1, names=["x"], gpu=True).filter(_pos, gpu=True) \
+        .map(_f2, names=["x"], gpu=True)
+    return fl
+
+
+@pytest.mark.parametrize("mk_rows", [
+    # mixed: some rows pass, some are masked out
+    lambda: [jnp.linspace(-1.0, 1.0, 8) + i - 2 for i in range(5)],
+    # empty-result batch: every row filtered
+    lambda: [-jnp.ones(8) * (i + 1) for i in range(4)],
+    # all-pass batch: no row filtered
+    lambda: [jnp.ones(8) * (i + 1) for i in range(4)],
+], ids=["mixed", "empty-result", "all-pass"])
+def test_filter_chain_lowers_and_matches_interpreted(mk_rows):
+    """A Filter fuses into the jitted body as a mask column: the chain
+    still executes as ONE vmapped dispatch, and the output table (row ids,
+    values, dropped rows) is identical to the interpreted path."""
+    plan = _lower(_filter_chain())
+    op = plan.ops[0].op
+    assert isinstance(op, BatchedJittedFuse) and op._has_filter
+    interp = build_pipeline(fusion=True, jit_fusion=False).run(
+        PhysicalPlan.from_dataflow(_filter_chain()))
+    t = _table(mk_rows())
+    got, want = plan.execute_local(t), interp.execute_local(t)
+    assert op.batch_dispatches == 1          # masked rows cost no dispatch
+    assert [r.row_id for r in got.rows] == [r.row_id for r in want.rows]
+    for a, b in zip(got.rows, want.rows):
+        np.testing.assert_allclose(np.asarray(a.values[0]),
+                                   np.asarray(b.values[0]), rtol=1e-6)
+
+
+def test_filter_chain_per_row_jitted_matches_interpreted():
+    """The per-row executable threads the keep-bit too (used below the
+    batching crossover and for singletons)."""
+    plan = _lower(_filter_chain(), batched=False)
+    op = plan.ops[0].op
+    assert isinstance(op, JittedFuse) and not isinstance(op,
+                                                         BatchedJittedFuse)
+    interp = build_pipeline(fusion=True, jit_fusion=False).run(
+        PhysicalPlan.from_dataflow(_filter_chain()))
+    t = _table([jnp.linspace(-1.0, 1.0, 8) + i - 2 for i in range(5)])
+    got, want = plan.execute_local(t), interp.execute_local(t)
+    assert [r.row_id for r in got.rows] == [r.row_id for r in want.rows]
+    for a, b in zip(got.rows, want.rows):
+        np.testing.assert_allclose(np.asarray(a.values[0]),
+                                   np.asarray(b.values[0]), rtol=1e-6)
+
+
+def test_filter_chain_singleton_routes_per_row():
+    plan = _lower(_filter_chain())
+    op = plan.ops[0].op
+    kept = plan.execute_local(_table([jnp.ones(8)]))
+    dropped = plan.execute_local(_table([-jnp.ones(8)]))
+    assert op.batch_dispatches == 0 and op.row_dispatches == 2
+    assert len(kept) == 1 and len(dropped) == 0
+
+
+# ---------------------------------------------------------------------------
+# device residency at the operator level
+# ---------------------------------------------------------------------------
+
+def test_apply_batched_emits_and_consumes_device_tables():
+    from repro.core.table import DeviceTable
+
+    plan = _lower(_chain())
+    op = plan.ops[0].op
+    t = _table([jnp.linspace(-1.0, 1.0, 8) * (i + 1) for i in range(3)])
+    dt = op.apply_batched([t], emit_device=True)
+    assert isinstance(dt, DeviceTable)
+    assert dt.nrows == 3 and dt.cap == 4      # padded to the bucket
+    assert [i for i in dt.row_ids] == [r.row_id for r in t.rows]
+    # the emitted DeviceTable holds the chain's output...
+    want = op.apply_batched([t])
+    out = dt.to_table()
+    assert [r.row_id for r in out.rows] == [r.row_id for r in want.rows]
+    for a, b in zip(out.rows, want.rows):
+        np.testing.assert_allclose(np.asarray(a.values[0]),
+                                   np.asarray(b.values[0]), rtol=1e-6)
+    # ...and a chain handed a DeviceTable *input* computes the same rows
+    # as the host-table path, without re-stacking
+    dt_in = DeviceTable.from_table(t, pad_to=4)
+    dt_in.donatable = False
+    got = op.apply_batched([dt_in])
+    assert [r.row_id for r in got.rows] == [r.row_id for r in want.rows]
+    for a, b in zip(got.rows, want.rows):
+        np.testing.assert_allclose(np.asarray(a.values[0]),
+                                   np.asarray(b.values[0]), rtol=1e-6)
+
+
+def test_device_chain_donates_exclusive_buffers():
+    """A donatable DeviceTable handed to a chain has its buffers donated
+    to XLA (donate_argnums): after the call the input arrays are deleted —
+    the allocation was reused for the output batch."""
+    from repro.core.table import DeviceTable
+
+    plan = _lower(_chain())
+    op = plan.ops[0].op
+    t = _table([jnp.linspace(-1.0, 1.0, 8) * (i + 1) for i in range(4)])
+    dt = DeviceTable.from_table(t, pad_to=4)
+    assert dt.donatable
+    out = op.apply_batched([dt], emit_device=True)
+    assert len(out) == 4 and not dt.donatable    # consumed
+    with pytest.raises(RuntimeError):
+        jax.device_get(dt.columns[0])            # donated -> deleted
+    # shared (non-donatable) inputs survive execution
+    dt2 = DeviceTable.from_table(t, pad_to=4)
+    dt2.donatable = False
+    op.apply_batched([dt2])
+    np.testing.assert_allclose(np.asarray(jax.device_get(dt2.columns[0]))[0],
+                               np.asarray(t.rows[0].values[0]))
+
+
+def test_filter_chain_stays_device_resident_until_boundary():
+    """Masked (filtered) rows ride along on the device; compaction happens
+    only at the device->host boundary."""
+    plan = _lower(_filter_chain())
+    op = plan.ops[0].op
+    t = _table([jnp.ones(8) * (1 if i % 2 else -1) * (i + 1)
+                for i in range(4)])
+    dt = op.apply_batched([t], emit_device=True)
+    assert dt.mask is not None and dt.nrows == 4   # rows masked, not gone
+    out = dt.to_table()
+    assert [r.row_id for r in out.rows] == \
+        [r.row_id for i, r in enumerate(t.rows) if i % 2]
+
+
+# ---------------------------------------------------------------------------
+# cost-based exec-path routing (measured per-row vs batched crossover)
+# ---------------------------------------------------------------------------
+
+def test_router_prefers_per_row_below_measured_crossover():
+    """With a profile that says n per-row dispatches are cheaper than one
+    batched dispatch at n's bucket, a small batch takes the per-row
+    executable — no stacking, no vmapped dispatch."""
+    EXECUTABLE_CACHE.clear()
+    plan = _lower(_chain())
+    op = plan.ops[0].op
+    prof = EXECUTABLE_CACHE.profile(op._sig)
+    prof.note_per_row(0.0001)              # 0.1ms/row
+    prof.note_batched(4, 0.01)             # warm-up sample (discarded)
+    prof.note_batched(4, 0.01)             # 10ms per 4-row dispatch
+    t = _table([jnp.ones(8) * i for i in range(4)])
+    out = plan.execute_local(t)
+    assert len(out) == 4
+    assert op.batch_dispatches == 0 and op.row_dispatches == 4
+    # flip the measurements: same batch now takes the vmapped path
+    prof.batched_s[4] = 0.00001
+    plan.execute_local(t)
+    assert op.batch_dispatches == 1
+
+
+def test_router_probes_batched_path_when_unmeasured():
+    EXECUTABLE_CACHE.clear()
+    plan = _lower(_chain())
+    op = plan.ops[0].op
+    prof = EXECUTABLE_CACHE.profile(op._sig)
+    prof.note_per_row(0.0001)
+    # no batched estimate for this bucket yet -> batch (the call doubles
+    # as the probe that measures the batched path)
+    plan.execute_local(_table([jnp.ones(8) * i for i in range(4)]))
+    assert op.batch_dispatches == 1
+
+
+def test_chain_profile_crossover_math():
+    from repro.core.lowering import ChainProfile
+
+    p = ChainProfile()
+    assert p.crossover_rows() is None      # unmeasured
+    p.note_per_row(0.001)                  # 1ms/row
+    for _ in range(2):                     # first sample per bucket is
+        p.note_batched(4, 0.003)           # discarded as warm-up
+        p.note_batched(8, 0.004)
+    assert p.batched_s == {4: 0.003, 8: 0.004}
+    # n=2 -> bucket 4: 2ms < 3ms per-row wins; n=3 -> 3ms >= 3ms: batch
+    assert p.prefer_per_row(2, 4) and not p.prefer_per_row(3, 4)
+    assert p.crossover_rows() == 3
+    assert p.snapshot()["crossover_rows"] == 3
+
+
+def test_routed_per_row_timing_feeds_profile():
+    """Multi-row tables routed below the crossover feed the per-row EWMA
+    with warm, amortized measurements.  Singletons and cold (tracing)
+    calls never record — their cost is not the marginal per-row cost —
+    and plain per-row chains never consult the router, so they skip the
+    timing (and its host sync) entirely."""
+    EXECUTABLE_CACHE.clear()
+    plan = _lower(_chain())
+    op = plan.ops[0].op
+    plan.execute_local(_table([jnp.ones(8)]))   # cold singleton: no sample
+    plan.execute_local(_table([jnp.ones(8)]))   # warm singleton: no sample
+    prof = EXECUTABLE_CACHE.profile(op._sig)
+    assert prof.per_row_samples == 0
+    # make the router send a multi-row table per-row: that one records
+    prof.note_per_row(0.0001)
+    prof.note_batched(4, 1.0)
+    prof.note_batched(4, 1.0)              # first sample is warm-up
+    plan.execute_local(_table([jnp.ones(8) * i for i in range(3)]))
+    assert op.batch_dispatches == 0        # routed per-row
+    assert prof.per_row_samples == 2       # injected + measured
+    # plain per-row lowering: no router, no timing
+    per_row_plan = _lower(_chain(), batched=False)
+    assert not getattr(per_row_plan.ops[0].op, "adaptive_routing", False)
+
+
 def test_planner_decides_batched_lowering_from_hints():
     from repro.core.planner import make_plan
     from repro.runtime.netmodel import NetModel

@@ -51,3 +51,78 @@ def test_schema_compat():
     assert schema_compatible([("a", int)], [("z", int)])
     assert not schema_compatible([("a", int)], [("a", str)])
     assert not schema_compatible([("a", int)], [("a", int), ("b", int)])
+
+
+# ---------------------------------------------------------------------------
+# DeviceTable: device-resident columnar batches
+# ---------------------------------------------------------------------------
+
+def _dt_table(jnp, n=3, dim=4):
+    import jax
+    return Table([("x", jax.Array)],
+                 [(jnp.ones(dim) * (i + 1),) for i in range(n)])
+
+
+def test_device_table_roundtrip_preserves_identity():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.core.table import DeviceTable
+
+    t = _dt_table(jnp)
+    t.rows[1].group = "g"
+    dt = DeviceTable.from_table(t, pad_to=4)
+    assert len(dt) == 3 and dt.cap == 4 and dt.donatable
+    assert dt.column_index("x") == 0
+    back = dt.to_table()
+    assert [r.row_id for r in back.rows] == [r.row_id for r in t.rows]
+    assert back.rows[1].group == "g"
+    for a, b in zip(back.rows, t.rows):
+        import numpy as np
+        np.testing.assert_allclose(np.asarray(a.values[0]),
+                                   np.asarray(b.values[0]))
+
+
+def test_device_table_rejects_ragged_rows():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.core.table import DeviceTable
+
+    t = Table([("x", jax.Array)], [(jnp.ones(4),), (jnp.ones(8),)])
+    with pytest.raises(ValueError):
+        DeviceTable.from_table(t)
+
+
+def test_device_table_take_pads_and_masks():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.table import DeviceTable
+
+    t = _dt_table(jnp, n=4)
+    dt = DeviceTable.from_table(t, pad_to=4)
+    part = dt.take([1, 2], pad_to=4)       # re-padded to the bucket
+    assert part.nrows == 2 and part.cap == 4 and part.mask is not None
+    out = part.to_table()
+    assert [r.row_id for r in out.rows] == [t.rows[1].row_id,
+                                            t.rows[2].row_id]
+    np.testing.assert_allclose(np.asarray(out.rows[0].values[0]),
+                               np.full(4, 2.0))
+
+
+def test_device_table_host_copy_accounting():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.core.table import (DeviceTable, HOST_COPIES,
+                                  reset_host_copies)
+
+    reset_host_copies()
+    dt = DeviceTable.from_table(_dt_table(jnp), pad_to=4)
+    assert HOST_COPIES == {"stacks": 1, "gathers": 0}
+    dt.take([0, 1])                        # device-side: no host copy
+    assert HOST_COPIES == {"stacks": 1, "gathers": 0}
+    dt.to_table()
+    assert HOST_COPIES == {"stacks": 1, "gathers": 1}
