@@ -8,12 +8,15 @@ the validated claims are the relative effects from the paper's figures.
                [--json]
 
 ``--json`` additionally writes machine-readable artifacts for suites that
-support it (currently ``batching`` -> ``BENCH_batching.json``: p50/p99
-latency, dispatches/row, batch-size histogram, executable-cache stats,
-plus the ``device_resident`` section — per-stage host-copy counts for the
-staged vs device-resident 3-node chain, the learned per-chain crossover
-table, and the filter-in-jit equivalence check) so CI can track the perf
-trajectory across PRs.
+support it (``batching`` -> ``BENCH_batching.json``: p50/p99 latency,
+dispatches/row, batch-size histogram, executable-cache stats, plus the
+``device_resident`` section — per-stage host-copy counts for the staged
+vs device-resident 3-node chain, the learned per-chain crossover table,
+and the filter-in-jit equivalence check; ``slo_planner`` ->
+``BENCH_slo_planner.json``: estimator predicted vs measured p50/p99 with
+relative error, and SLO attainment of the optimizer's PlanConfig vs the
+default config across arrival rates) so CI can track the perf trajectory
+across PRs.
 """
 from __future__ import annotations
 
@@ -22,7 +25,7 @@ import sys
 import time
 
 SUITES = ("fusion", "jit_fusion", "competitive", "autoscaling", "locality",
-          "batching", "pipelines", "roofline")
+          "batching", "slo_planner", "pipelines", "roofline")
 
 
 def main() -> None:
@@ -65,6 +68,12 @@ def main() -> None:
         emit(batching.run(n_requests=16 if args.fast else 48,
                           json_path="BENCH_batching.json" if args.json
                           else None))
+    if "slo_planner" in only:
+        from benchmarks import slo_planner
+        emit(slo_planner.run(
+            n_requests=60 if args.fast else 150,
+            rates=(60.0, 170.0) if args.fast else (60.0, 120.0, 170.0),
+            json_path="BENCH_slo_planner.json" if args.json else None))
     if "pipelines" in only:
         from benchmarks import pipelines
         emit(pipelines.run(n=8 if args.fast else 16))

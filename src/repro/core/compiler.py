@@ -34,10 +34,14 @@ def compile_flow(flow: Dataflow, runtime, *, fusion: bool = False,
                  jit_fusion: bool = True, batched_lowering: bool = True,
                  default_replicas: int = 3,
                  pipeline: Optional[PassPipeline] = None,
+                 plan_config=None,
                  name: Optional[str] = None) -> "DeployedFlow":
     """Compile + register ``flow``.  Pass either optimization flags (mapped
     to a pass configuration via ``build_pipeline``) or an explicit
-    ``pipeline``."""
+    ``pipeline``.  ``plan_config`` (a ``repro.profiling.optimizer``
+    ``PlanConfig``) threads the SLO optimizer's per-node choices through
+    the pass pipeline AND applies the runtime-side knobs (per-node batcher
+    window/max-batch, padding buckets) to the fresh deployment."""
     flow.typecheck()
     plan = PhysicalPlan.from_dataflow(flow)
     if pipeline is None:
@@ -45,12 +49,16 @@ def compile_flow(flow: Dataflow, runtime, *, fusion: bool = False,
             fusion=fusion, competitive_exec=competitive_exec,
             locality=locality, jit_fusion=jit_fusion,
             batched_lowering=batched_lowering,
-            default_replicas=default_replicas)
+            default_replicas=default_replicas,
+            plan_config=plan_config)
     ctx = PassContext()
     plan = pipeline.run(plan, ctx)
     dag_name = name or f"flow{next(_flow_ids)}"
     dag = runtime.register_plan(plan, dag_name)
-    return DeployedFlow(flow, plan, dag, runtime, ctx.trace)
+    deployed = DeployedFlow(flow, plan, dag, runtime, ctx.trace)
+    if plan_config is not None:
+        plan_config.apply_runtime(runtime, dag)
+    return deployed
 
 
 class DeployedFlow:

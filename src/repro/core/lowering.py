@@ -329,6 +329,25 @@ def chain_signature(chain_ops: List[ops.Operator]) -> Tuple[Any, ...]:
     return _chain_steps(chain_ops)
 
 
+def crossover_from_costs(per_row_s: Optional[float],
+                         batched_s: Dict[int, float],
+                         max_n: int = 1024) -> Optional[int]:
+    """THE crossover rule, shared by the live router (``ChainProfile``)
+    and the offline profiler's ``OpLatencyCurve`` — the smallest batch
+    size n at which one batched dispatch at n's covering measured bucket
+    beats n per-row dispatches, or None while either path is unmeasured.
+    One definition, so the optimizer's offline decision and the runtime
+    router's live decision cannot silently diverge."""
+    if per_row_s is None or not batched_s:
+        return None
+    measured = sorted(batched_s)
+    for n in range(1, min(max_n, measured[-1]) + 1):
+        b = next((batched_s[m] for m in measured if m >= n), None)
+        if b is not None and n * per_row_s >= b:
+            return n
+    return None
+
+
 class ChainProfile:
     """Measured execution costs of one chain, feeding the exec-path router.
 
@@ -435,14 +454,35 @@ class ChainProfile:
         with self._lock:
             per_row_s = self.per_row_s
             batched_s = dict(self.batched_s)
-        if per_row_s is None or not batched_s:
-            return None
-        measured = sorted(batched_s)
-        for n in range(1, min(max_n, measured[-1]) + 1):
-            b = next((batched_s[m] for m in measured if m >= n), None)
-            if b is not None and n * per_row_s >= b:
-                return n
-        return None
+        return crossover_from_costs(per_row_s, batched_s, max_n)
+
+    # -- serialization (profiler persistence across processes) ---------------
+    def to_dict(self) -> Dict[str, Any]:
+        """Stable JSON-serializable state: the EWMAs and sample counts the
+        router needs, with bucket keys as strings (JSON objects only have
+        string keys — ``from_dict`` restores ints)."""
+        with self._lock:
+            return {
+                "alpha": self.alpha,
+                "per_row_s": self.per_row_s,
+                "per_row_samples": self.per_row_samples,
+                "batched_s": {str(b): s for b, s in self.batched_s.items()},
+                "batched_samples": {str(b): n for b, n
+                                    in self.batched_samples.items()},
+            }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ChainProfile":
+        p = cls(alpha=float(d.get("alpha", 0.3)))
+        per_row = d.get("per_row_s")
+        p.per_row_s = float(per_row) if per_row is not None else None
+        p.per_row_samples = int(d.get("per_row_samples", 0))
+        p.batched_s = {int(b): float(s)
+                       for b, s in (d.get("batched_s") or {}).items()}
+        p.batched_samples = {int(b): int(n)
+                             for b, n in (d.get("batched_samples") or {})
+                             .items()}
+        return p
 
     def snapshot(self) -> Dict[str, Any]:
         with self._lock:

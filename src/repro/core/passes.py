@@ -27,7 +27,8 @@ from __future__ import annotations
 import copy
 import dataclasses
 import time
-from typing import Dict, List, Optional, Protocol, runtime_checkable
+from typing import Any, Dict, List, Optional, Protocol, Tuple, \
+    runtime_checkable
 
 from repro.core import operators as ops
 from repro.core.ir import SOURCE_ID, PhysicalOp, PhysicalPlan
@@ -293,6 +294,13 @@ class LowerJaxChainsPass:
     min_ops: int = 2
     batched: bool = True
     bucket_sizes: tuple = DEFAULT_BUCKETS
+    # per-op overrides (SLO optimizer's PlanConfig): op_id -> padding
+    # buckets / batched-vs-per-row decision, so bucket sizes and lowering
+    # mode stop being global constants
+    bucket_overrides: Dict[int, Tuple[int, ...]] = \
+        dataclasses.field(default_factory=dict)
+    batched_overrides: Dict[int, bool] = \
+        dataclasses.field(default_factory=dict)
     name: str = dataclasses.field(default="lower-jax-chains", init=False)
 
     def run(self, plan: PhysicalPlan, ctx: PassContext) -> PhysicalPlan:
@@ -311,14 +319,16 @@ class LowerJaxChainsPass:
                 target.high_variance = o.high_variance
                 target.competitive_replicas = o.replicas
             if target is not None:
-                lo = lower_fuse(target, batched=self.batched,
-                                bucket_sizes=tuple(self.bucket_sizes))
-                o = o.replace(op=lo, batchable=self.batched,
-                              batch_buckets=(tuple(self.bucket_sizes)
-                                             if self.batched else ()),
-                              device_resident=self.batched)
+                batched = self.batched_overrides.get(o.op_id, self.batched)
+                buckets = tuple(self.bucket_overrides.get(
+                    o.op_id, self.bucket_sizes))
+                lo = lower_fuse(target, batched=batched,
+                                bucket_sizes=buckets)
+                o = o.replace(op=lo, batchable=batched,
+                              batch_buckets=buckets if batched else (),
+                              device_resident=batched)
                 lowered += 1
-                kind = "vmap-batched" if self.batched else "per-row"
+                kind = "vmap-batched" if batched else "per-row"
                 ctx.note(f"%{o.op_id}: {len(o.op.ops)} ops -> 1 jitted fn "
                          f"({kind})")
             new_ops.append(o)
@@ -327,24 +337,79 @@ class LowerJaxChainsPass:
         return plan.with_ops(new_ops)
 
 
+@dataclasses.dataclass
+class ApplyPlanConfigPass:
+    """Stamp an SLO optimizer ``PlanConfig``'s compile-time per-node
+    choices onto the IR: placement overrides and competitive replication
+    factors.  Runs early (before competitive/fusion), so the stamped
+    annotations flow through the later passes the normal way; config keys
+    are compiled-plan op ids, which are stable across recompiles of the
+    same flow because fusion keeps the downstream op's id."""
+    config: Any            # duck-typed repro.profiling.optimizer.PlanConfig
+    name: str = dataclasses.field(default="apply-config", init=False)
+
+    def run(self, plan: PhysicalPlan, ctx: PassContext) -> PhysicalPlan:
+        placements = self.config.placement_overrides()
+        replicas = self.config.replica_overrides()
+        new_ops, stamped = [], 0
+        for o in plan.ops:
+            kw = {}
+            pl = placements.get(o.op_id)
+            if pl is not None and pl != o.placement:
+                kw["placement"] = pl
+            k = replicas.get(o.op_id)
+            if k is not None and k != o.replicas:
+                kw["replicas"] = k
+                kw["high_variance"] = True
+            if kw:
+                o = o.replace(**kw)
+                stamped += 1
+            new_ops.append(o)
+        if stamped:
+            ctx.note(f"stamped config onto {stamped} ops")
+        return plan.with_ops(new_ops)
+
+
 def build_pipeline(*, fusion: bool = False, competitive_exec: bool = False,
                    locality: bool = False, jit_fusion: bool = True,
                    batched_lowering: bool = True,
                    default_replicas: int = 3,
+                   plan_config=None,
                    validate: bool = True) -> PassPipeline:
     """Map optimization flags (a planner ``Plan`` or user choices) onto a
     pass configuration.  Order mirrors the paper's rewrite order: locality
     first (lookup fusion feeds dispatch), then replication, then fusion
     (boundary-aware when locality is on), then XLA lowering of whatever
     fusion produced (batched vmap-over-rows lowering unless
-    ``batched_lowering=False``)."""
+    ``batched_lowering=False``).
+
+    ``plan_config`` (a ``repro.profiling.optimizer.PlanConfig``) threads
+    the SLO optimizer's per-node choices in: compile-time stamps via
+    ``ApplyPlanConfigPass`` and per-op bucket/lowering overrides on
+    ``LowerJaxChainsPass``."""
     passes: List[Pass] = []
     if locality:
         passes.append(FuseLookupsPass())
+    if plan_config is not None:
+        passes.append(ApplyPlanConfigPass(plan_config))
     if competitive_exec:
         passes.append(CompetitivePass(default_replicas=default_replicas))
+    elif plan_config is not None and plan_config.replica_overrides():
+        # the config names specific ops to replicate: default_replicas=0
+        # keeps high_variance-hinted ops the optimizer did NOT propose
+        # from being silently expanded too
+        passes.append(CompetitivePass(default_replicas=0))
     if fusion:
         passes.append(FuseChainsPass(preserve_lookup_boundaries=locality))
-    if jit_fusion and fusion:
-        passes.append(LowerJaxChainsPass(batched=batched_lowering))
+    if jit_fusion and (fusion or plan_config is not None):
+        # a config-driven compile must not silently drop the config's
+        # lowering/bucket overrides just because fusion is off (a replan
+        # recompile exists precisely to realize them): without fusion
+        # there are no Fuse nodes, so lower bare gpu maps too (min_ops=1)
+        lower = LowerJaxChainsPass(batched=batched_lowering,
+                                   min_ops=2 if fusion else 1)
+        if plan_config is not None:
+            lower.bucket_overrides = plan_config.bucket_overrides()
+            lower.batched_overrides = plan_config.batched_overrides()
+        passes.append(lower)
     return PassPipeline(passes, validate=validate)

@@ -20,14 +20,12 @@ mean/CV and output payload size) and decides:
 from __future__ import annotations
 
 import dataclasses
-import statistics
-import time
 from typing import Any, Dict, List, Optional
 
 from repro.core import operators as ops
 from repro.core.dataflow import Dataflow, Node
 from repro.core.table import Table
-from repro.runtime.netmodel import NetModel, nbytes
+from repro.runtime.netmodel import NetModel
 
 
 @dataclasses.dataclass
@@ -59,50 +57,33 @@ class Plan:
                 "batched_lowering": self.batched_lowering,
                 "default_replicas": self.default_replicas}
 
-    def build_pipeline(self):
+    def build_pipeline(self, config=None):
         """The plan IS a pass configuration: materialize it as the
-        ``PassPipeline`` the compiler will run over the physical-plan IR."""
+        ``PassPipeline`` the compiler will run over the physical-plan IR.
+        ``config`` (a ``repro.profiling.optimizer.PlanConfig``) adds the
+        SLO optimizer's per-node overrides — padding buckets, batched vs
+        per-row lowering, placement — so bucket sizes stop being global
+        constants."""
         from repro.core.passes import build_pipeline
-        return build_pipeline(**self.flags)
-
-
-class _ProfileCtx:
-    """Execution context with a KVS for profiling lookups locally."""
-
-    def __init__(self, kvs=None):
-        self.kvs = kvs
-
-    def kvs_get(self, key):
-        return self.kvs.get(key, charge=False)
+        return build_pipeline(plan_config=config, **self.flags)
 
 
 def profile_flow(flow: Dataflow, sample: Table, *, runs: int = 3,
                  kvs=None) -> Dict[int, OpProfile]:
-    """Run the flow ``runs`` times locally, timing every operator."""
-    flow.typecheck()
-    ctx = _ProfileCtx(kvs)
-    stats: Dict[int, List[float]] = {}
-    sizes: Dict[int, int] = {}
-    for _ in range(runs):
-        results: Dict[int, Table] = {}
-        for n in flow.sorted_nodes():
-            if n.op is None:
-                results[n.id] = sample
-                continue
-            ins = [results[u.id] for u in n.upstreams]
-            t0 = time.perf_counter()
-            out = n.op.apply(ins, ctx)
-            dt = time.perf_counter() - t0
-            stats.setdefault(n.id, []).append(dt)
-            sizes[n.id] = nbytes(out)
-            results[n.id] = out
-    profiles = {}
-    for nid, ts in stats.items():
-        mean = statistics.mean(ts)
-        cv = (statistics.stdev(ts) / mean) if (len(ts) > 1 and mean > 0) \
-            else 0.0
-        profiles[nid] = OpProfile(mean_s=mean, cv=cv,
-                                  out_bytes=sizes[nid], runs=len(ts))
+    """Profile the flow at the sample's batch size, one ``OpProfile`` per
+    node.  The measurement loop lives in ``repro.profiling.profiler``
+    (the batch-sweep profiler) — this is the planner-facing view of a
+    single-size sweep."""
+    from repro.profiling.profiler import profile_flow_curves
+    fp = profile_flow_curves(flow, sample, runs=runs, kvs=kvs)
+    profiles: Dict[int, OpProfile] = {}
+    for nid, curve in fp.curves.items():
+        if not curve.buckets:
+            continue
+        b = max(curve.buckets)
+        st = curve.buckets[b]
+        profiles[nid] = OpProfile(mean_s=st.mean_s, cv=st.cv,
+                                  out_bytes=st.out_bytes, runs=st.runs)
     return profiles
 
 

@@ -1,0 +1,28 @@
+"""SLO-driven profiling & adaptive replanning: the layer between the
+compiler and the runtime that closes the measure -> model -> plan ->
+replan loop.
+
+* :mod:`repro.profiling.profiler` — offline batch-sweep profiler
+  (``OpLatencyCurve`` / ``FlowProfile``), plus live-curve refresh from
+  ``ChainProfile`` measurements;
+* :mod:`repro.profiling.estimator` — M/M/c + critical-path DAG latency
+  estimator (``LatencyEstimator``);
+* :mod:`repro.profiling.optimizer` — SLO-aware configuration search
+  (``propose`` -> ``PlanConfig``);
+* :mod:`repro.profiling.controller` — online controller that snapshots
+  runtime metrics and hot-applies safe config deltas (``SLOController``).
+"""
+from repro.profiling.controller import ControllerEvent, SLOController
+from repro.profiling.estimator import (LatencyEstimate, LatencyEstimator,
+                                       Workload, erlang_c)
+from repro.profiling.optimizer import NodeConfig, PlanConfig, propose
+from repro.profiling.profiler import (BucketStats, FlowProfile,
+                                      OpLatencyCurve, profile_flow_curves,
+                                      profile_plan, refresh_from_plan)
+
+__all__ = [
+    "BucketStats", "ControllerEvent", "FlowProfile", "LatencyEstimate",
+    "LatencyEstimator", "NodeConfig", "OpLatencyCurve", "PlanConfig",
+    "SLOController", "Workload", "erlang_c", "profile_flow_curves",
+    "profile_plan", "propose", "refresh_from_plan",
+]

@@ -1,0 +1,225 @@
+"""Online SLO controller: the *replan* step of the
+measure -> model -> plan -> replan loop.
+
+``SLOController`` periodically (or on explicit ``tick()``, which is what
+tests drive) closes the loop over a LIVE deployment:
+
+1. **measure** — snapshot ``Runtime.metrics`` (consistent under the
+   metrics lock), derive the current arrival rate from request
+   timestamps, and fold every lowered chain's live ``ChainProfile``
+   (measured per-row / per-bucket EWMAs) back into the offline
+   :class:`~repro.profiling.profiler.FlowProfile` curves;
+2. **model + plan** — re-run ``optimizer.propose`` at the measured rate;
+3. **replan** — hot-apply the *runtime-safe* deltas (batcher window and
+   max-batch, lowered-op padding buckets, autoscaler replica targets)
+   through ``PlanConfig.apply_runtime`` — no flow re-registration, no
+   executable re-trace; when the proposal needs compile-time changes
+   (lowering mode, placement, competitive topology) AND the estimator
+   says the currently-applied config misses the SLO, escalate: record a
+   ``replan`` event and invoke the ``on_replan`` callback (which may
+   recompile via ``compile_flow(plan_config=...)``).
+
+The controller never blocks the serving path: every step is control
+plane, reading locked snapshots and mutating batcher/bucket/target knobs
+that the hot path reads per call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.profiling.estimator import LatencyEstimator, Workload
+from repro.profiling.optimizer import NodeConfig, PlanConfig, propose
+from repro.profiling.profiler import FlowProfile, refresh_from_plan
+
+
+@dataclasses.dataclass
+class ControllerEvent:
+    kind: str                    # "idle" | "steady" | "apply" | "replan"
+    t: float
+    arrival_rate: float
+    detail: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class SLOController:
+    """Watches one deployed flow and keeps its configuration matched to
+    the measured traffic and the latency SLO."""
+
+    def __init__(self, runtime, deployed, slo_p99_s: float, *,
+                 profile: FlowProfile,
+                 autoscaler=None,
+                 interval_s: float = 0.5,
+                 window_s: float = 5.0,
+                 min_rate: float = 0.5,
+                 max_replicas: int = 8,
+                 max_window_ms: float = 10.0,
+                 on_replan: Optional[Callable[[PlanConfig], None]] = None):
+        self.runtime = runtime
+        self.deployed = deployed
+        self.slo_p99_s = slo_p99_s
+        self.profile = profile
+        self.autoscaler = autoscaler
+        self.interval_s = interval_s
+        self.window_s = window_s
+        self.min_rate = min_rate
+        self.max_replicas = max_replicas
+        self.max_window_ms = max_window_ms
+        self.on_replan = on_replan
+        self.applied: Optional[PlanConfig] = None
+        self.events: List[ControllerEvent] = []
+        self._stop = False
+        self._thread: Optional[threading.Thread] = None
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "SLOController":
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="slo-controller")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop = True
+
+    def _loop(self) -> None:
+        while not self._stop:
+            try:
+                self.tick()
+            except Exception:       # the control loop must never die
+                pass
+            time.sleep(self.interval_s)
+
+    # -- measurement ---------------------------------------------------------
+    def arrival_rate(self,
+                     snapshot: Optional[Dict[str, List[float]]] = None) \
+            -> float:
+        """Requests/s over the recent window, from the runtime's request
+        timestamps for this DAG."""
+        snap = snapshot if snapshot is not None \
+            else self.runtime.metrics_snapshot()
+        ts = snap.get(f"dag/{self.deployed.dag.name}/request_t", [])
+        if len(ts) < 2:
+            return 0.0
+        # window against NOW (same clock call_dag stamps), not the newest
+        # request — anchoring on ts[-1] would re-measure the last burst's
+        # rate forever after traffic stops, pinning stale replica targets
+        now = time.perf_counter()
+        recent = [t for t in ts if t >= now - self.window_s]
+        if len(recent) < 2:
+            return 0.0
+        span = recent[-1] - recent[0]
+        if span <= 0:
+            return 0.0
+        return (len(recent) - 1) / span
+
+    def refresh_profile(self) -> bool:
+        """Fold live ChainProfile measurements into the curves."""
+        return refresh_from_plan(self.profile, self.deployed.plan)
+
+    # -- the loop body -------------------------------------------------------
+    def tick(self) -> ControllerEvent:
+        now = time.perf_counter()
+        snap = self.runtime.metrics_snapshot()
+        rate = self.arrival_rate(snap)
+        if rate < self.min_rate:
+            ev = ControllerEvent("idle", now, rate)
+            self.events.append(ev)
+            return ev
+        self.refresh_profile()
+        proposal = propose(self.deployed.plan, self.slo_p99_s, rate,
+                           profile=self.profile, net=self.runtime.net,
+                           max_replicas=self.max_replicas,
+                           max_window_ms=self.max_window_ms)
+        detail: Dict[str, Any] = {
+            "predicted_p99_ms": (proposal.predicted.p99_s * 1e3
+                                 if proposal.predicted else None)}
+
+        kind = "steady"
+        if self.applied is None or proposal.differs_runtime(self.applied):
+            notes = proposal.apply_runtime(self.runtime, self.deployed.dag,
+                                           autoscaler=self.autoscaler)
+            if notes:
+                kind = "apply"
+                detail["applied"] = notes
+
+        # does the deployment as it NOW stands meet the SLO?  That is the
+        # proposal's runtime-safe knobs (just applied above) with the
+        # compile-time facts — lowering mode, competitive topology,
+        # placement — read back from the LIVE plan: judging against the
+        # pre-apply config would escalate a replan whose safe deltas
+        # already fixed the miss, and trusting the proposal's unapplied
+        # compile-time knobs would mask a persistent miss forever
+        current = self._live_config(proposal)
+        cur_pred = LatencyEstimator(self.profile, net=self.runtime.net) \
+            .estimate(self.deployed.plan, current,
+                      Workload(arrival_rate=rate))
+        detail["current_p99_ms"] = cur_pred.p99_s * 1e3
+        if not cur_pred.meets(self.slo_p99_s) \
+                and self._needs_recompile(proposal) \
+                and proposal.predicted is not None \
+                and proposal.predicted.p99_s < cur_pred.p99_s:
+            # safe deltas alone don't reach the SLO and the proposal wants
+            # compile-time changes the live plan can't express (lowering
+            # mode / placement / competitive topology): escalate
+            kind = "replan"
+            detail["recompile"] = True
+            if self.on_replan is not None:
+                self.on_replan(proposal)
+        self.applied = proposal
+        ev = ControllerEvent(kind, now, rate, detail)
+        self.events.append(ev)
+        return ev
+
+    def _live_config(self, applied: Optional[PlanConfig]) -> PlanConfig:
+        """The deployment as it actually is: the applied runtime-safe
+        knobs (or defaults) with compile-time facts — lowering mode,
+        competitive replication — read back from the live plan."""
+        import dataclasses as _dc
+
+        from repro.core.lowering import BatchedJittedFuse
+        plan = self.deployed.plan
+        # competitive topology is EXPANDED in a compiled plan: the factor
+        # lives in the wait-any consumer's input count, not in .replicas
+        # (CompetitivePass resets the replica ops' annotation to 0)
+        competitive: Dict[int, int] = {}
+        for o in plan.ops:
+            if o.wait_any and len(o.inputs) >= 2:
+                competitive[o.op_id] = len(o.inputs)
+                for i in o.inputs:
+                    competitive[i] = len(o.inputs)
+        cfg = PlanConfig(nodes={}, slo_p99_s=self.slo_p99_s)
+        for o in plan.ops:
+            base = applied.nodes.get(o.op_id) if applied else None
+            nc = _dc.replace(base) if base is not None else NodeConfig()
+            nc.batched_lowering = isinstance(o.op, BatchedJittedFuse)
+            nc.competitive_replicas = competitive.get(o.op_id, o.replicas)
+            nc.placement = o.placement
+            cfg.nodes[o.op_id] = nc
+        return cfg
+
+    def _needs_recompile(self, proposal: PlanConfig) -> bool:
+        """Does the proposal want compile-time changes relative to the
+        LIVE plan?  Compared against what the deployment actually is, not
+        against earlier proposals: a batched-lowered op serves both
+        per-row and vmapped execution through its adaptive router, so a
+        ``batched_lowering`` flip only needs a recompile in the
+        per-row-lowered -> batched direction."""
+        from repro.core.lowering import BatchedJittedFuse, JittedFuse
+        for o in self.deployed.plan.ops:
+            cfg = proposal.nodes.get(o.op_id)
+            if cfg is None:
+                continue
+            if o.wait_any:
+                # this slot already IS a competitive wait-any consumer —
+                # asking for competitive execution here is satisfied
+                continue
+            if cfg.placement is not None and cfg.placement != o.placement:
+                return True
+            if cfg.competitive_replicas >= 2 and o.replicas < 2:
+                return True
+            if cfg.batched_lowering and cfg.max_batch > 1 \
+                    and isinstance(o.op, JittedFuse) \
+                    and not isinstance(o.op, BatchedJittedFuse):
+                return True
+        return False

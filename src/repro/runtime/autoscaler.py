@@ -3,6 +3,15 @@
 Monitors per-function pending work; adds replicas for saturated functions
 and trims idle over-provisioned ones, leaving slack (the paper's observed
 behavior: a couple of spare replicas after a spike settles).
+
+Two control modes per function:
+
+* **target mode** — an optimizer-suggested replica count set via
+  ``set_target`` (the SLO controller's M/M/c ``c`` for the measured
+  arrival rate): scale up toward the target immediately, trim (with
+  hysteresis) anything beyond ``target + slack``.
+* **depth heuristic** — the original queue-depth rule, used for
+  functions with no target.
 """
 from __future__ import annotations
 
@@ -35,6 +44,8 @@ class Autoscaler:
         self._stop = False
         self.history: List[Dict[str, int]] = []
         self._idle_ticks: Dict[str, int] = {f: 0 for f in functions}
+        self._targets: Dict[str, int] = {}
+        self._targets_lock = threading.Lock()
         self._thread = threading.Thread(target=self._loop, daemon=True)
 
     def start(self):
@@ -44,26 +55,69 @@ class Autoscaler:
     def stop(self):
         self._stop = True
 
-    def _loop(self):
+    # -- optimizer-suggested targets (SLO controller hook) --------------------
+    def set_target(self, fname: str, replicas: int) -> None:
+        """Pin ``fname``'s replica count to an optimizer-suggested target
+        (clamped to the configured bounds).  Overrides the queue-depth
+        heuristic until ``clear_target``."""
+        with self._targets_lock:
+            self._targets[fname] = max(self.cfg.min_replicas,
+                                       min(int(replicas),
+                                           self.cfg.max_replicas))
+
+    def clear_target(self, fname: str) -> None:
+        with self._targets_lock:
+            self._targets.pop(fname, None)
+
+    def target(self, fname: str) -> Optional[int]:
+        with self._targets_lock:
+            return self._targets.get(fname)
+
+    def _tick_target(self, fname: str, rclass: str, n: int,
+                     target: int) -> None:
+        """Converge toward the target: scale up fast (bounded per tick),
+        trim anything beyond ``target + slack`` slowly (hysteresis), so a
+        spike's replicas settle with the paper's observed slack."""
         c = self.cfg
+        if n < target:
+            for _ in range(min(c.scale_up_count, target - n)):
+                self.pool.add_replica(fname, rclass)
+            self._idle_ticks[fname] = 0
+        elif n > target + c.slack:
+            self._idle_ticks[fname] += 1
+            if self._idle_ticks[fname] >= 4:      # hysteresis
+                self.pool.remove_replica(fname)
+                self._idle_ticks[fname] = 0
+        else:
+            self._idle_ticks[fname] = 0
+
+    def _tick_depth(self, fname: str, rclass: str, n: int) -> None:
+        """The original queue-depth heuristic (no target set)."""
+        c = self.cfg
+        depth = self.pool.queue_depth(fname, rclass)
+        per = depth / n
+        if per > c.scale_up_depth and n < c.max_replicas:
+            for _ in range(min(c.scale_up_count, c.max_replicas - n)):
+                self.pool.add_replica(fname, rclass)
+            self._idle_ticks[fname] = 0
+        elif per < c.scale_down_idle and n > c.min_replicas + c.slack:
+            self._idle_ticks[fname] += 1
+            if self._idle_ticks[fname] >= 8:       # hysteresis
+                self.pool.remove_replica(fname)
+                self._idle_ticks[fname] = 0
+        else:
+            self._idle_ticks[fname] = 0
+
+    def _loop(self):
         while not self._stop:
             snapshot = {}
             for fname, rclass in self.functions.items():
                 n = max(1, self.pool.replica_count(fname))
-                depth = self.pool.queue_depth(fname, rclass)
-                per = depth / n
-                if per > c.scale_up_depth and n < c.max_replicas:
-                    for _ in range(min(c.scale_up_count,
-                                       c.max_replicas - n)):
-                        self.pool.add_replica(fname, rclass)
-                    self._idle_ticks[fname] = 0
-                elif per < c.scale_down_idle and n > c.min_replicas + c.slack:
-                    self._idle_ticks[fname] += 1
-                    if self._idle_ticks[fname] >= 8:   # hysteresis
-                        self.pool.remove_replica(fname)
-                        self._idle_ticks[fname] = 0
+                target = self.target(fname)
+                if target is not None:
+                    self._tick_target(fname, rclass, n, target)
                 else:
-                    self._idle_ticks[fname] = 0
+                    self._tick_depth(fname, rclass, n)
                 snapshot[fname] = self.pool.replica_count(fname)
             self.history.append(snapshot)
-            time.sleep(c.interval_s)
+            time.sleep(self.cfg.interval_s)

@@ -47,7 +47,16 @@ class Runtime:
         self._batchers_lock = threading.Lock()
         self._retired_batchers: List[Batcher] = []
         self._rng = random.Random(seed)
+        # metrics are appended from executor callback threads and read by
+        # the SLO controller: every access goes through _metrics_lock so
+        # snapshots are consistent (do not mutate self.metrics directly —
+        # use record_metric / metrics_snapshot)
         self.metrics: Dict[str, List[float]] = {}
+        self._metrics_lock = threading.Lock()
+        # per-node batching overrides (SLO optimizer PlanConfig): node
+        # name -> {"max_batch": int, "batch_wait_ms": float}; consulted at
+        # batcher creation and hot-applied to live batchers
+        self._node_batch_cfg: Dict[str, Dict[str, float]] = {}
 
     # -- registration ---------------------------------------------------------
     def register_dag(self, dag: RuntimeDag, plan=None):
@@ -122,8 +131,63 @@ class Runtime:
         ex.submit(WorkItem(fn=node.fn, tables=tables,
                            produced_on=produced_on, callback=callback))
 
+    #: per-series retention: enough history for any rate/percentile window
+    #: the controller uses, while keeping snapshot cost and memory constant
+    #: under long-running traffic (series are trimmed amortized, at 2x)
+    METRIC_SERIES_CAP = 4096
+
     def record_metric(self, key: str, value: float):
-        self.metrics.setdefault(key, []).append(value)
+        with self._metrics_lock:
+            series = self.metrics.setdefault(key, [])
+            series.append(value)
+            if len(series) >= 2 * self.METRIC_SERIES_CAP:
+                del series[:-self.METRIC_SERIES_CAP]
+
+    def metrics_snapshot(self) -> Dict[str, List[float]]:
+        """A consistent copy of every metric series (the controller reads
+        this while executor callbacks keep appending)."""
+        with self._metrics_lock:
+            return {k: list(v) for k, v in self.metrics.items()}
+
+    # -- online reconfiguration (SLO controller hot-apply) --------------------
+    def configure_batching(self, node_name: str, *,
+                           max_batch: Optional[int] = None,
+                           batch_wait_ms: Optional[float] = None) -> bool:
+        """Set a node's batching knobs — applied to its LIVE batcher (the
+        batch loop reads them per iteration) and remembered for batchers
+        created later.  Pure control plane: no re-registration, no
+        executable re-trace.  Returns True if anything changed."""
+        cfg = self._node_batch_cfg.setdefault(node_name, {})
+        changed = False
+        if max_batch is not None and cfg.get("max_batch") != int(max_batch):
+            cfg["max_batch"] = int(max_batch)
+            changed = True
+        if batch_wait_ms is not None and \
+                cfg.get("batch_wait_ms") != float(batch_wait_ms):
+            cfg["batch_wait_ms"] = float(batch_wait_ms)
+            changed = True
+        with self._batchers_lock:
+            b = self._batchers.get(node_name)
+        if b is not None and changed:
+            b.reconfigure(max_batch=cfg.get("max_batch"),
+                          max_wait_ms=cfg.get("batch_wait_ms"))
+        return changed
+
+    def set_node_buckets(self, dag_name: str, node_name: str,
+                         buckets) -> None:
+        """Retune a deployed node's batch padding buckets in place (the
+        ChainProfile-driven bucket auto-tuning): updates the runtime
+        node's annotation and the lowered op's ``bucket_sizes``.  Already
+        compiled bucket shapes keep hitting the executable cache; a new
+        bucket compiles lazily on first use."""
+        dag = self.dags[dag_name]
+        node = dag.nodes[node_name]
+        node.batch_buckets = tuple(buckets)
+        plan = self.plans.get(dag_name)
+        if plan is not None and node.plan_op_id is not None:
+            op = plan.op(node.plan_op_id).op
+            if hasattr(op, "bucket_sizes"):
+                op.bucket_sizes = tuple(buckets)
 
     def _dispatch_batched(self, node: RuntimeNode, tables, produced_on,
                           callback, locality_key: Optional[str] = None):
@@ -139,9 +203,12 @@ class Runtime:
             # the shared queue (phantom batches, skewed histograms)
             b = self._batchers.get(node.name)
             if b is None:
+                cfg = self._node_batch_cfg.get(node.name, {})
                 b = Batcher(self._make_batch_fn(node),
-                            max_batch=self.max_batch,
-                            max_wait_ms=self.batch_wait_ms)
+                            max_batch=int(cfg.get("max_batch",
+                                                  self.max_batch)),
+                            max_wait_ms=float(cfg.get("batch_wait_ms",
+                                                      self.batch_wait_ms)))
                 self._batchers[node.name] = b
         try:
             b.submit((tables, produced_on, callback, locality_key))
@@ -279,6 +346,19 @@ class Runtime:
     def call_dag(self, name: str, table: Table) -> Future:
         dag = self.dags[name]
         fut: Future = Future()
+        # arrival + end-to-end latency series: what the SLO controller's
+        # rate estimate and the benchmark's measured p99 read back
+        t0 = time.perf_counter()
+        self.record_metric(f"dag/{name}/request_t", t0)
+
+        def _record(f: Future):
+            try:
+                if f.exception() is None:
+                    self.record_metric(f"dag/{name}/latency_s",
+                                       time.perf_counter() - t0)
+            except BaseException:
+                pass
+        fut.add_done_callback(_record)
         _DagExecution(self, dag, table, fut).start()
         return fut
 

@@ -79,6 +79,24 @@ class Batcher:
             self.q.put(item)
         return item
 
+    def reconfigure(self, *, max_batch: Optional[int] = None,
+                    max_wait_ms: Optional[float] = None) -> None:
+        """Hot-apply new batching knobs (the SLO controller's safe config
+        delta).  The batch loop reads ``max_batch``/``max_wait`` fresh on
+        every iteration, so the change takes effect on the next batch —
+        in-flight batches are untouched."""
+        with self._lock:
+            if max_batch is not None:
+                self.max_batch = max(1, int(max_batch))
+            if max_wait_ms is not None:
+                self.max_wait = max(0.0, float(max_wait_ms)) / 1000.0
+
+    def arrival_gap_s(self) -> Optional[float]:
+        """The EWMA of recent inter-arrival gaps (None before 2 submits) —
+        the controller's cheap read on how dense this node's traffic is."""
+        with self._lock:
+            return self._gap_ewma
+
     def effective_wait(self) -> float:
         """How long the batch loop holds a partial batch open.  Arrivals
         expected WITHIN the window keep the full window (so every merge
