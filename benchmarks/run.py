@@ -15,8 +15,11 @@ vs device-resident 3-node chain, the learned per-chain crossover table,
 and the filter-in-jit equivalence check; ``slo_planner`` ->
 ``BENCH_slo_planner.json``: estimator predicted vs measured p50/p99 with
 relative error, and SLO attainment of the optimizer's PlanConfig vs the
-default config across arrival rates) so CI can track the perf trajectory
-across PRs.
+default config across arrival rates; ``replan`` -> ``BENCH_replan.json``:
+steady-state vs during-swap p99 across a controller-initiated blue/green
+swap, dropped/errored request counts, and the post-swap executable
+re-trace count — all must stay at zero drops / zero re-traces) so CI can
+track the perf trajectory across PRs.
 """
 from __future__ import annotations
 
@@ -25,7 +28,7 @@ import sys
 import time
 
 SUITES = ("fusion", "jit_fusion", "competitive", "autoscaling", "locality",
-          "batching", "slo_planner", "pipelines", "roofline")
+          "batching", "slo_planner", "replan", "pipelines", "roofline")
 
 
 def main() -> None:
@@ -74,6 +77,12 @@ def main() -> None:
             n_requests=60 if args.fast else 150,
             rates=(60.0, 170.0) if args.fast else (60.0, 120.0, 170.0),
             json_path="BENCH_slo_planner.json" if args.json else None))
+    if "replan" in only:
+        from benchmarks import replan
+        emit(replan.run(
+            duration_s=5.0 if args.fast else 10.0,
+            rate_hz=80.0 if args.fast else 120.0,
+            json_path="BENCH_replan.json" if args.json else None))
     if "pipelines" in only:
         from benchmarks import pipelines
         emit(pipelines.run(n=8 if args.fast else 16))

@@ -35,15 +35,31 @@ def compile_flow(flow: Dataflow, runtime, *, fusion: bool = False,
                  default_replicas: int = 3,
                  pipeline: Optional[PassPipeline] = None,
                  plan_config=None,
-                 name: Optional[str] = None) -> "DeployedFlow":
+                 name: Optional[str] = None,
+                 register: bool = True) -> "DeployedFlow":
     """Compile + register ``flow``.  Pass either optimization flags (mapped
     to a pass configuration via ``build_pipeline``) or an explicit
     ``pipeline``.  ``plan_config`` (a ``repro.profiling.optimizer``
     ``PlanConfig``) threads the SLO optimizer's per-node choices through
     the pass pipeline AND applies the runtime-side knobs (per-node batcher
-    window/max-batch, padding buckets) to the fresh deployment."""
+    window/max-batch, padding buckets) to the fresh deployment.
+
+    ``register=False`` compiles OFF the serving path: the DAG is prepared
+    (generation assigned, drivable via ``Runtime.call_dag_object``) but no
+    traffic routes to it and any live deployment under ``name`` is
+    untouched — the blue/green replanner's green-compile step.  The caller
+    activates it later with ``runtime.register_dag(dep.dag, plan=dep.plan)``
+    and applies the plan-config's runtime knobs after the swap."""
     flow.typecheck()
     plan = PhysicalPlan.from_dataflow(flow)
+    # remember the flag set (None under an explicit pipeline): a replan
+    # recompile must reproduce the pass configuration, because PlanConfig
+    # op ids are only stable across recompiles with the SAME flags
+    compile_flags = None if pipeline is not None else {
+        "fusion": fusion, "competitive_exec": competitive_exec,
+        "locality": locality, "jit_fusion": jit_fusion,
+        "batched_lowering": batched_lowering,
+        "default_replicas": default_replicas}
     if pipeline is None:
         pipeline = build_pipeline(
             fusion=fusion, competitive_exec=competitive_exec,
@@ -54,9 +70,14 @@ def compile_flow(flow: Dataflow, runtime, *, fusion: bool = False,
     ctx = PassContext()
     plan = pipeline.run(plan, ctx)
     dag_name = name or f"flow{next(_flow_ids)}"
-    dag = runtime.register_plan(plan, dag_name)
+    if register:
+        dag = runtime.register_plan(plan, dag_name)
+    else:
+        dag = RuntimeDag.from_plan(plan, dag_name)
+        runtime.prepare_dag(dag)
     deployed = DeployedFlow(flow, plan, dag, runtime, ctx.trace)
-    if plan_config is not None:
+    deployed.compile_flags = compile_flags
+    if plan_config is not None and register:
         plan_config.apply_runtime(runtime, dag)
     return deployed
 
@@ -69,6 +90,10 @@ class DeployedFlow:
         self.dag = dag
         self.runtime = runtime
         self.pass_trace = pass_trace or []
+        #: the build_pipeline flag set this flow was compiled with (None
+        #: when an explicit pipeline was passed) — what a blue/green
+        #: recompile must reuse for op-id-stable PlanConfig application
+        self.compile_flags: Optional[dict] = None
 
     @property
     def rewritten(self) -> Dataflow:

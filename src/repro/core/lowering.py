@@ -49,6 +49,7 @@ Three engine capabilities live at this layer:
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import threading
 import time
@@ -892,6 +893,43 @@ class BatchedJittedFuse(JittedFuse):
 
     def apply(self, tables: List[Table], ctx=None) -> Table:
         return self.apply_batched(tables, ctx)
+
+    # -- cache warming (blue/green replanning) -------------------------------
+    def warm(self, tables: List[Table], ctx=None, *,
+             emit_device: bool = False, donate_out: bool = False):
+        """Execute the chain once with the exec-path router BYPASSED
+        (always the vmapped executable), so this call traces/loads the
+        batch's bucket executable through ``EXECUTABLE_CACHE`` regardless
+        of what the measured crossover would route.  The blue/green
+        replanner walks a freshly compiled plan through this at every
+        bucket size before any traffic is swapped onto it — the first
+        post-swap request must find every executable already compiled
+        (``EXECUTABLE_CACHE.traces()`` flat across the swap).
+
+        Same contract as ``apply_batched`` (the warm-up result doubles as
+        a correctness canary); a singleton input still warms the per-row
+        executable, exactly the path a live singleton takes."""
+        with forced_batched_routing([self]):
+            return self.apply_batched(tables, ctx, emit_device=emit_device,
+                                      donate_out=donate_out)
+
+
+@contextlib.contextmanager
+def forced_batched_routing(chain_ops):
+    """Temporarily disable adaptive exec-path routing on the given lowered
+    chains, so every multi-row call takes the vmapped executable — the
+    cache-warming walk must trace the batched path at every bucket even
+    where the live router would (correctly) route small batches per-row.
+    Restores each chain's previous routing flag on exit."""
+    prev = [(o, o.adaptive_routing) for o in chain_ops
+            if isinstance(o, BatchedJittedFuse)]
+    for o, _ in prev:
+        o.adaptive_routing = False
+    try:
+        yield
+    finally:
+        for o, flag in prev:
+            o.adaptive_routing = flag
 
 
 def lower_fuse(fuse: ops.Fuse, *, batched: bool = False,

@@ -10,7 +10,10 @@ replan loop.
 * :mod:`repro.profiling.optimizer` — SLO-aware configuration search
   (``propose`` -> ``PlanConfig``);
 * :mod:`repro.profiling.controller` — online controller that snapshots
-  runtime metrics and hot-applies safe config deltas (``SLOController``).
+  runtime metrics and hot-applies safe config deltas (``SLOController``);
+* :mod:`repro.profiling.replan` — zero-downtime blue/green replanning
+  (``BlueGreenReplanner``): compile off the hot path, pre-warm
+  executables, canary-verify, atomically swap generations.
 """
 from repro.profiling.controller import ControllerEvent, SLOController
 from repro.profiling.estimator import (LatencyEstimate, LatencyEstimator,
@@ -19,10 +22,13 @@ from repro.profiling.optimizer import NodeConfig, PlanConfig, propose
 from repro.profiling.profiler import (BucketStats, FlowProfile,
                                       OpLatencyCurve, profile_flow_curves,
                                       profile_plan, refresh_from_plan)
+from repro.profiling.replan import (BlueGreenReplanner, ReplanReport,
+                                    warm_deployment)
 
 __all__ = [
-    "BucketStats", "ControllerEvent", "FlowProfile", "LatencyEstimate",
-    "LatencyEstimator", "NodeConfig", "OpLatencyCurve", "PlanConfig",
-    "SLOController", "Workload", "erlang_c", "profile_flow_curves",
-    "profile_plan", "propose", "refresh_from_plan",
+    "BlueGreenReplanner", "BucketStats", "ControllerEvent", "FlowProfile",
+    "LatencyEstimate", "LatencyEstimator", "NodeConfig", "OpLatencyCurve",
+    "PlanConfig", "ReplanReport", "SLOController", "Workload", "erlang_c",
+    "profile_flow_curves", "profile_plan", "propose", "refresh_from_plan",
+    "warm_deployment",
 ]

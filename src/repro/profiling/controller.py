@@ -14,10 +14,18 @@ tests drive) closes the loop over a LIVE deployment:
    max-batch, lowered-op padding buckets, autoscaler replica targets)
    through ``PlanConfig.apply_runtime`` — no flow re-registration, no
    executable re-trace; when the proposal needs compile-time changes
-   (lowering mode, placement, competitive topology) AND the estimator
-   says the currently-applied config misses the SLO, escalate: record a
-   ``replan`` event and invoke the ``on_replan`` callback (which may
-   recompile via ``compile_flow(plan_config=...)``).
+   (lowering mode, placement, competitive topology) AND the deployment
+   misses the SLO — a missed latency estimate OR a rising error rate
+   (failures must not read as "fast") — escalate: record a ``replan``
+   event and invoke ``on_replan``.  When a ``replan_sample`` is
+   provided, ``on_replan`` defaults to a
+   :class:`~repro.profiling.replan.BlueGreenReplanner` over the same
+   deployment: compile the green plan off the hot path, pre-warm its
+   executables through the shared cache, canary-verify, atomically swap
+   generations, and confirm the post-swap SLO on the next tick
+   (``post_replan_confirm`` in the event detail).  Without a sample the
+   escalation only records the event — a swap that can be neither
+   warmed nor verified is not taken by default.
 
 The controller never blocks the serving path: every step is control
 plane, reading locked snapshots and mutating batcher/bucket/target knobs
@@ -55,7 +63,10 @@ class SLOController:
                  min_rate: float = 0.5,
                  max_replicas: int = 8,
                  max_window_ms: float = 10.0,
-                 on_replan: Optional[Callable[[PlanConfig], None]] = None):
+                 max_error_rate: float = 0.02,
+                 replan_sample=None,
+                 replan_cooldown_s: float = 30.0,
+                 on_replan: Optional[Callable[[PlanConfig], Any]] = None):
         self.runtime = runtime
         self.deployed = deployed
         self.slo_p99_s = slo_p99_s
@@ -66,9 +77,24 @@ class SLOController:
         self.min_rate = min_rate
         self.max_replicas = max_replicas
         self.max_window_ms = max_window_ms
+        #: error fraction over the window above which the deployment
+        #: counts as missing its SLO even if the (success-only) latency
+        #: estimate looks fine
+        self.max_error_rate = max_error_rate
+        #: representative request table handed to the default replanner
+        #: for executable warming + canary verification
+        self.replan_sample = replan_sample
+        #: after a FAILED replan (canary mismatch, compile error), wait
+        #: this long before attempting another — each attempt costs a
+        #: full compile + warm + canary round on the controller thread,
+        #: and a persistent failure would otherwise re-run it every tick
+        self.replan_cooldown_s = replan_cooldown_s
         self.on_replan = on_replan
         self.applied: Optional[PlanConfig] = None
         self.events: List[ControllerEvent] = []
+        self._replanner = None          # lazily built default on_replan
+        self._confirm_next = False      # a replan swapped; judge next tick
+        self._next_replan_t = 0.0       # failure cooldown gate
         self._stop = False
         self._thread: Optional[threading.Thread] = None
 
@@ -113,9 +139,49 @@ class SLOController:
             return 0.0
         return (len(recent) - 1) / span
 
+    def error_rate(self,
+                   snapshot: Optional[Dict[str, List[float]]] = None) \
+            -> float:
+        """Failed fraction of this DAG's requests completing in the
+        recent window (error completions over all completions)."""
+        snap = snapshot if snapshot is not None \
+            else self.runtime.metrics_snapshot()
+        name = self.deployed.dag.name
+        now = time.perf_counter()
+        lo = now - self.window_s
+        errs = sum(1 for t in snap.get(f"dag/{name}/error_t", [])
+                   if t >= lo)
+        if errs == 0:
+            return 0.0
+        # successes carry no completion timestamp series; approximate the
+        # window's total with arrivals (completions lag arrivals by one
+        # latency — negligible at controller timescales).  An error burst
+        # whose arrivals already left the window still reads as 100%.
+        arrivals = sum(
+            1 for t in snap.get(f"dag/{name}/request_t", []) if t >= lo)
+        return errs / max(1, errs, arrivals)
+
     def refresh_profile(self) -> bool:
         """Fold live ChainProfile measurements into the curves."""
         return refresh_from_plan(self.profile, self.deployed.plan)
+
+    def _default_replanner(self):
+        """The default ``on_replan``: a BlueGreenReplanner over this
+        deployment (built lazily; needs the logical flow and the recorded
+        compile flags to produce an op-id-stable recompile).  Without a
+        ``replan_sample`` there is NO default: a sample is what makes the
+        swap warm (zero post-swap traces) and canary-verified — silently
+        swapping a cold, unverified plan under a live SLO miss would be
+        worse than recording the event, the pre-PR-5 behavior."""
+        if self._replanner is None:
+            from repro.profiling.replan import BlueGreenReplanner
+            if getattr(self.deployed, "flow", None) is None \
+                    or self.replan_sample is None:
+                return None
+            self._replanner = BlueGreenReplanner(
+                self.runtime, self.deployed, sample=self.replan_sample,
+                autoscaler=self.autoscaler)
+        return self._replanner
 
     # -- the loop body -------------------------------------------------------
     def tick(self) -> ControllerEvent:
@@ -155,7 +221,21 @@ class SLOController:
             .estimate(self.deployed.plan, current,
                       Workload(arrival_rate=rate))
         detail["current_p99_ms"] = cur_pred.p99_s * 1e3
-        if not cur_pred.meets(self.slo_p99_s) \
+        # a rising error rate is an SLO miss: the latency series only
+        # records successes, so under failures the measured (and modeled)
+        # p99 improves exactly when the system degrades
+        err_rate = self.error_rate(snap)
+        detail["error_rate"] = err_rate
+        slo_ok = cur_pred.meets(self.slo_p99_s) \
+            and err_rate <= self.max_error_rate
+        detail["slo_ok"] = slo_ok
+        if self._confirm_next:
+            # the previous tick swapped generations: judge the post-swap
+            # deployment against the SLO and say so
+            self._confirm_next = False
+            detail["post_replan_confirm"] = {
+                "p99_ms": cur_pred.p99_s * 1e3, "slo_ok": slo_ok}
+        if not slo_ok \
                 and self._needs_recompile(proposal) \
                 and proposal.predicted is not None \
                 and proposal.predicted.p99_s < cur_pred.p99_s:
@@ -164,8 +244,22 @@ class SLOController:
             # mode / placement / competitive topology): escalate
             kind = "replan"
             detail["recompile"] = True
-            if self.on_replan is not None:
-                self.on_replan(proposal)
+            if now < self._next_replan_t:
+                # a recent attempt failed; don't burn a compile + warm +
+                # canary round every tick on a fault that hasn't changed
+                detail["replan_suppressed_s"] = self._next_replan_t - now
+            else:
+                handler = self.on_replan or self._default_replanner()
+                if handler is not None:
+                    result = handler(proposal)
+                    report = getattr(result, "to_dict", None)
+                    if report is not None:
+                        detail["replan_report"] = report()
+                    if getattr(result, "ok", False):
+                        # green is live — confirm SLO on the next tick
+                        self._confirm_next = True
+                    elif hasattr(result, "ok"):
+                        self._next_replan_t = now + self.replan_cooldown_s
         self.applied = proposal
         ev = ControllerEvent(kind, now, rate, detail)
         self.events.append(ev)

@@ -112,7 +112,7 @@ class PlanConfig:
                 continue
             if node.batching:
                 changed = runtime.configure_batching(
-                    node.name, max_batch=cfg.max_batch,
+                    dag.name, node.name, max_batch=cfg.max_batch,
                     batch_wait_ms=cfg.batch_wait_ms)
                 if changed:
                     applied.append(

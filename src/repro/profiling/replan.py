@@ -1,0 +1,370 @@
+"""Zero-downtime blue/green replanning: the *replan* step the controller
+escalates to when the fix needs compile-time changes.
+
+The paper's position (and InferLine's) is that a serving dataflow must be
+re-optimizable without taking traffic down.  The controller's hot-apply
+path covers runtime-safe knobs; everything else — lowering mode flips,
+placement, competitive topology, bucket sets — needs a recompile, and a
+naive re-registration would serve cold executables to live traffic (and,
+before generation-keyed runtime state, corrupt the old deployment's
+batchers).  :class:`BlueGreenReplanner` does it safely:
+
+1. **compile** — ``compile_flow(plan_config=…, register=False)`` builds
+   the green plan + DAG entirely off the serving path; blue keeps serving.
+2. **warm** — :func:`warm_deployment` walks the green DAG topologically at
+   every padding bucket size with the exec-path router bypassed
+   (``forced_batched_routing``), tracing every (chain, bucket, variant)
+   executable through the shared ``EXECUTABLE_CACHE`` before any traffic
+   can reach it.  Chains unchanged from blue hit the cache (zero new
+   traces); changed ones pay their traces here, not on a request.
+3. **canary-verify** — a few requests driven through the green DAG via
+   ``Runtime.call_dag_object`` (not traffic-visible, not recorded in the
+   controller's metric series), outputs checked against the BLUE
+   generation's output for the same input — a replan changes execution
+   strategy, never semantics, so the generations must agree.  (Blue as
+   reference keeps the check on warm executables; ``reference="local"``
+   swaps in the logical flow's interpreted ground truth, which pays
+   first-time eager-op compiles and is kept for offline use.)  A mismatch
+   or error ABORTS the replan; blue stays live and untouched.
+4. **swap** — ``Runtime.register_dag`` atomically routes new ``call_dag``
+   requests to green while in-flight executions finish on blue; blue's
+   batchers retire when their generation's last request completes and
+   close once quiescent.  The proposal's runtime knobs (batcher windows,
+   autoscaler targets) are applied to green; hot-applied batch config
+   carries over automatically where node names match
+   (``Runtime._node_batch_cfg`` is keyed logically), and live router
+   state (``ChainProfile``) carries over wherever chain signatures match
+   (the executable cache keys by signature, not by deployment).
+5. **confirm** — the controller's next tick measures the post-swap config
+   against the SLO (``post_replan_confirm`` in the event detail).
+
+The ``DeployedFlow`` handle is updated in place, so every holder — the
+controller, benchmarks, user code — follows the swap transparently.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.compiler import compile_flow
+from repro.core.lowering import (EXECUTABLE_CACHE, BatchedJittedFuse,
+                                 forced_batched_routing)
+from repro.core.table import DeviceTable, Table
+from repro.profiling.profiler import ProfileCtx, _replicate
+
+
+@dataclasses.dataclass
+class ReplanReport:
+    """What one blue/green replan attempt did, phase by phase."""
+    dag_name: str
+    ok: bool = False
+    phase: str = "init"        # compile | warm | canary | swap | done
+    reason: str = ""           # why it aborted, when it did
+    blue_generation: int = 0
+    green_generation: int = 0
+    warm: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    canary: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    timings_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+    notes: List[str] = dataclasses.field(default_factory=list)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# warm: trace every (chain, bucket) executable before traffic arrives
+# ---------------------------------------------------------------------------
+
+def _walk_sizes(runtime, deployed, extra_rows=()) -> List[int]:
+    """Row counts the warm walk must cover: every configured padding
+    bucket, PLUS the bucket a full batcher merge pads to — the batcher
+    coalesces up to ``max_batch`` single-row requests, and past the
+    largest configured bucket padding doubles, so a max-size batch can
+    land on a bucket outside the configured set."""
+    from repro.core.lowering import bucket_rows
+    plan, dag = deployed.plan, deployed.dag
+    by_op_id = {n.plan_op_id: n for n in dag.nodes.values()}
+    sizes = set(extra_rows)
+    for o in plan.ops:
+        op = o.op
+        if not isinstance(op, BatchedJittedFuse):
+            continue
+        sizes.update(op.bucket_sizes)
+        node = by_op_id.get(o.op_id)
+        if node is not None and node.batching:
+            cfg = runtime._node_batch_cfg.get((dag.name, node.name), {})
+            mb = int(cfg.get("max_batch", runtime.max_batch))
+            sizes.add(bucket_rows(mb, op.bucket_sizes))
+    return sorted(sizes or {1})
+
+
+def warm_deployment(runtime, deployed, sample: Table,
+                    buckets: Optional[List[int]] = None,
+                    extra_rows=()) -> Dict[str, Any]:
+    """Pre-trace a compiled deployment's executables through the shared
+    ``EXECUTABLE_CACHE``: walk the DAG topologically once per padding
+    bucket size, feeding each node its upstream's real output, with the
+    exec-path router bypassed so the vmapped executable is traced even at
+    sizes the live router would send per-row.  A 1-row walk additionally
+    warms the per-row executables (the live singleton path).
+
+    Walking the *runtime* node functions — not the bare ops — matters:
+    they capture the device-residency flags (``emit_device``/donation), so
+    exactly the executable variants live traffic will request get traced.
+
+    Returns trace/entry accounting: ``fresh_traces`` is how many XLA
+    traces this warm paid so that post-swap traffic pays zero.  Coverage
+    assumes single-row requests (the serving norm): a merge of multi-row
+    requests can exceed ``max_batch`` rows and land on a bucket beyond the
+    warmed set — pass those sizes via ``extra_rows``."""
+    dag = deployed.dag
+    plan = deployed.plan
+    if buckets is None:
+        buckets = _walk_sizes(runtime, deployed, extra_rows)
+    ctx = ProfileCtx(getattr(runtime, "kvs", None))
+    before = EXECUTABLE_CACHE.traces()
+    stats_before = EXECUTABLE_CACHE.stats()
+    errors: List[str] = []
+    chain_ops = [o.op for o in plan.ops]
+    with forced_batched_routing(chain_ops):
+        for b in buckets:
+            src = _replicate(sample, b)
+            results: Dict[str, Any] = {}
+            for node in dag.topo():
+                if node.deps:
+                    ins = [results.get(d) for d in node.deps]
+                    if node.wait_any:
+                        ins = [next((t for t in ins if t is not None),
+                                    None)]
+                else:
+                    ins = [src]
+                if any(t is None for t in ins):
+                    continue        # upstream failed; best-effort walk
+                try:
+                    results[node.name] = node.fn(list(ins), ctx)
+                except Exception as e:      # warm is best-effort; the
+                    errors.append(          # canary judges correctness
+                        f"{node.name}@bucket{b}: {type(e).__name__}: {e}")
+    after = EXECUTABLE_CACHE.traces()
+    stats_after = EXECUTABLE_CACHE.stats()
+    return {
+        "buckets": list(buckets),
+        "traces_before": before,
+        "traces_after": after,
+        "fresh_traces": after - before,
+        "fresh_entries": stats_after["entries"] - stats_before["entries"],
+        "errors": errors,
+    }
+
+
+# ---------------------------------------------------------------------------
+# canary: green must reproduce the logical flow's results before it serves
+# ---------------------------------------------------------------------------
+
+def _rows_match(got: Table, want: Table, rtol: float) -> Optional[str]:
+    if len(got.rows) != len(want.rows):
+        return f"row count {len(got.rows)} != {len(want.rows)}"
+    for i, (g, w) in enumerate(zip(got.rows, want.rows)):
+        if len(g.values) != len(w.values):
+            return f"row {i}: arity {len(g.values)} != {len(w.values)}"
+        for j, (gv, wv) in enumerate(zip(g.values, w.values)):
+            try:
+                ga, wa = np.asarray(gv), np.asarray(wv)
+                if ga.shape != wa.shape:
+                    return (f"row {i} col {j}: shape {ga.shape} "
+                            f"!= {wa.shape}")
+                if ga.dtype.kind in "fc" or wa.dtype.kind in "fc":
+                    if not np.allclose(ga, wa, rtol=rtol, atol=1e-6):
+                        return f"row {i} col {j}: values differ"
+                elif not np.array_equal(ga, wa):
+                    return f"row {i} col {j}: values differ"
+            except Exception:
+                if gv != wv:
+                    return f"row {i} col {j}: values differ"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# the replanner
+# ---------------------------------------------------------------------------
+
+class BlueGreenReplanner:
+    """compile → warm → canary-verify → swap, with blue serving
+    throughout.  Callable, so it plugs directly into
+    ``SLOController(on_replan=replanner)`` — the controller's default
+    escalation path constructs one automatically.
+
+    ``sample`` is a representative request table (used for warming and
+    canaries; without it both steps are skipped, with a note — the swap
+    then pays cold traces only for chains that actually changed).
+    ``compile_flags`` defaults to the flags the deployment was compiled
+    with (recorded on ``DeployedFlow``); an explicit-pipeline deployment
+    must pass them, because PlanConfig op ids are only stable across
+    recompiles with the same pass configuration."""
+
+    def __init__(self, runtime, deployed, *, sample: Optional[Table] = None,
+                 autoscaler=None, canary_requests: int = 2,
+                 canary_timeout_s: float = 60.0, verify: bool = True,
+                 reference: str = "blue", rtol: float = 1e-5,
+                 compile_flags: Optional[dict] = None):
+        self.runtime = runtime
+        self.deployed = deployed
+        self.sample = sample
+        self.autoscaler = autoscaler
+        self.canary_requests = canary_requests
+        self.canary_timeout_s = canary_timeout_s
+        self.verify = verify
+        self.reference = reference        # "blue" | "local"
+        self.rtol = rtol
+        if compile_flags is None:
+            compile_flags = getattr(deployed, "compile_flags", None)
+        self.compile_flags = compile_flags
+        self.history: List[ReplanReport] = []
+
+    #: reports kept (a controller re-escalating for hours must not grow
+    #: the history without bound)
+    HISTORY_CAP = 32
+
+    def __call__(self, proposal) -> ReplanReport:
+        return self.replan(proposal)
+
+    # -- phases --------------------------------------------------------------
+    def _reference(self, blue_dag, rep: ReplanReport):
+        """The output green must reproduce: blue's, for the same input
+        (warm executables, no compile on the hot path), or the logical
+        flow's interpreted ground truth with ``reference="local"``."""
+        sample = self.sample
+        req = _replicate(sample, max(1, len(sample.rows)))
+        try:
+            if self.reference == "local":
+                return self.deployed.flow.execute_local(
+                    req, ProfileCtx(getattr(self.runtime, "kvs", None)))
+            out = self.runtime.call_dag_object(blue_dag, req) \
+                .result(timeout=self.canary_timeout_s)
+            if isinstance(out, DeviceTable):
+                out = out.to_table()
+            return out
+        except Exception as e:
+            rep.canary["reference_error"] = f"{type(e).__name__}: {e}"
+            return None
+
+    def _canary(self, green, blue_dag, rep: ReplanReport) -> bool:
+        sample = self.sample
+        want = self._reference(blue_dag, rep)
+        if want is None:
+            # no reference means no verification: abort rather than swap
+            # an unverified green (the documented contract — pass
+            # verify=False to swap without canaries)
+            rep.canary.update(requests=0, ok=False,
+                              error="reference unavailable: "
+                              + str(rep.canary.get("reference_error")))
+            return False
+        for i in range(self.canary_requests):
+            req = _replicate(sample, max(1, len(sample.rows)))
+            try:
+                out = self.runtime.call_dag_object(green.dag, req) \
+                    .result(timeout=self.canary_timeout_s)
+            except Exception as e:
+                rep.canary.update(requests=i + 1, ok=False,
+                                  error=f"{type(e).__name__}: {e}")
+                return False
+            if isinstance(out, DeviceTable):
+                out = out.to_table()
+            mismatch = _rows_match(out, want, self.rtol)
+            if mismatch is not None:
+                rep.canary.update(requests=i + 1, ok=False,
+                                  error=f"mismatch: {mismatch}")
+                return False
+        rep.canary.update(requests=self.canary_requests, ok=True)
+        return True
+
+    def replan(self, proposal) -> ReplanReport:
+        """Run the full lifecycle for one proposed ``PlanConfig``.  On any
+        pre-swap failure the report says why and BLUE IS UNTOUCHED; after
+        the swap point the report is ``ok`` and the ``DeployedFlow``
+        handle points at green."""
+        rt = self.runtime
+        dep = self.deployed
+        blue = dep.dag
+        rep = ReplanReport(dag_name=blue.name,
+                           blue_generation=blue.generation)
+        self.history.append(rep)
+        del self.history[:-self.HISTORY_CAP]
+
+        if self.compile_flags is None:
+            rep.phase, rep.reason = "compile", \
+                ("deployment compiled with an explicit pipeline; pass "
+                 "compile_flags to BlueGreenReplanner")
+            return rep
+
+        # 1) compile green off the hot path (blue keeps serving)
+        rep.phase = "compile"
+        t0 = time.perf_counter()
+        try:
+            green = compile_flow(dep.flow, rt, plan_config=proposal,
+                                 name=blue.name, register=False,
+                                 **self.compile_flags)
+        except Exception as e:
+            rep.reason = f"compile failed: {type(e).__name__}: {e}"
+            return rep
+        rep.timings_s["compile"] = time.perf_counter() - t0
+        rep.green_generation = green.dag.generation
+
+        swapped = False
+        try:
+            # 2) pre-warm every (chain, bucket, variant) executable — the
+            #    proposal's batcher sizes included, since a full merge
+            #    pads to THEIR covering bucket, configured set or not
+            rep.phase = "warm"
+            t0 = time.perf_counter()
+            if self.sample is not None:
+                extra = {cfg.max_batch for cfg in proposal.nodes.values()
+                         if cfg.max_batch > 1}
+                rep.warm = warm_deployment(rt, green, self.sample,
+                                           extra_rows=sorted(extra))
+            else:
+                rep.notes.append("no sample: warm skipped")
+            rep.timings_s["warm"] = time.perf_counter() - t0
+
+            # 3) canary-verify green end to end before traffic sees it
+            rep.phase = "canary"
+            t0 = time.perf_counter()
+            if self.verify and self.sample is not None:
+                if not self._canary(green, blue, rep):
+                    rep.reason = ("canary failed — blue stays live: "
+                                  + str(rep.canary.get("error")))
+                    return rep
+            else:
+                rep.notes.append("canary skipped")
+            rep.timings_s["canary"] = time.perf_counter() - t0
+
+            # 4) atomic swap: new requests -> green, in-flight finish on
+            #    blue, blue's batchers drain and close on quiescence
+            rep.phase = "swap"
+            t0 = time.perf_counter()
+            rt.register_dag(green.dag, plan=green.plan)
+            swapped = True
+            applied = proposal.apply_runtime(rt, green.dag,
+                                             autoscaler=self.autoscaler)
+            rep.notes.extend(applied)
+            # the handle every holder shares now IS the green deployment
+            dep.plan = green.plan
+            dep.dag = green.dag
+            dep.pass_trace = green.pass_trace
+            rep.timings_s["swap"] = time.perf_counter() - t0
+            rep.phase = "done"
+            rep.ok = True
+            return rep
+        finally:
+            if not swapped:
+                # aborted after green existed: its canary-created
+                # batchers (and their threads) must not leak — each
+                # re-escalation would otherwise compile a fresh green
+                # and pile up another generation's batchers
+                try:
+                    rt.discard_dag(green.dag)
+                except Exception:
+                    pass

@@ -56,6 +56,11 @@ class RuntimeDag:
     name: str
     nodes: Dict[str, RuntimeNode]
     output: str
+    #: deployment generation, assigned by ``Runtime.prepare_dag``: two
+    #: generations of the same logical DAG (blue/green replanning) must
+    #: never share mutable runtime state — batchers capture node closures,
+    #: so a generation owns its batchers exclusively.  0 = unregistered.
+    generation: int = 0
 
     @classmethod
     def from_plan(cls, plan, dag_name: str, *,

@@ -16,7 +16,7 @@ import random
 import threading
 import time
 from concurrent.futures import Future
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.lowering import DEFAULT_BUCKETS, bucket_rows
 from repro.core.table import DeviceTable, Table
@@ -43,7 +43,12 @@ class Runtime:
         self.plans: Dict[str, Any] = {}     # dag name -> PhysicalPlan
         self.max_batch = max_batch
         self.batch_wait_ms = batch_wait_ms
-        self._batchers: Dict[str, Batcher] = {}
+        # deployment state is keyed per GENERATION: two registered DAGs
+        # sharing a node name (or the blue and green generation of one
+        # DAG mid-swap) must never share a Batcher — its batch fn is a
+        # closure over one generation's nodes, so a shared entry would run
+        # the other deployment's captured code
+        self._batchers: Dict[Tuple[str, int, str], Batcher] = {}
         self._batchers_lock = threading.Lock()
         self._retired_batchers: List[Batcher] = []
         self._rng = random.Random(seed)
@@ -53,45 +58,153 @@ class Runtime:
         # use record_metric / metrics_snapshot)
         self.metrics: Dict[str, List[float]] = {}
         self._metrics_lock = threading.Lock()
-        # per-node batching overrides (SLO optimizer PlanConfig): node
-        # name -> {"max_batch": int, "batch_wait_ms": float}; consulted at
-        # batcher creation and hot-applied to live batchers
-        self._node_batch_cfg: Dict[str, Dict[str, float]] = {}
+        # per-node batching overrides (SLO optimizer PlanConfig), keyed
+        # (dag name, node name) — LOGICAL, not per generation: a replanned
+        # green generation inherits the hot-applied knobs of matching
+        # nodes.  Consulted at batcher creation, hot-applied to the live
+        # generation's batchers
+        self._node_batch_cfg: Dict[Tuple[str, str], Dict[str, float]] = {}
+        # generation lifecycle: in-flight request counts per
+        # (dag name, generation); a superseded generation drains — its
+        # in-flight executions finish on their own nodes/batchers — and
+        # its batchers are retired only once the count hits zero
+        self._gen_counter = itertools.count(1)
+        self._inflight: Dict[Tuple[str, int], int] = {}
+        self._draining: set = set()
+        # generations whose batchers were already retired: a straggler
+        # execution that creates a fresh batcher under a retired key gets
+        # it re-retired on completion.  A PREPARED (never-registered)
+        # generation is in neither set — its batchers persist, warm,
+        # until the swap makes them the live ones.
+        self._retired_gens: set = set()
+        self._lifecycle_lock = threading.Lock()
 
-    # -- registration ---------------------------------------------------------
-    def register_dag(self, dag: RuntimeDag, plan=None):
-        """Register a runtime DAG; ``plan`` (the PhysicalPlan it was lowered
-        from) is kept for introspection/debugging.  Re-registering under an
-        existing name drops the old deployment's batchers (their closures
-        captured the old nodes)."""
+    # -- registration / generation lifecycle ----------------------------------
+    def prepare_dag(self, dag: RuntimeDag) -> RuntimeDag:
+        """Validate ``dag`` and assign it a deployment generation WITHOUT
+        routing any traffic to it.  A prepared dag can be driven directly
+        via :meth:`call_dag_object` (warm-up, canary verification) and
+        owns generation-keyed runtime state (batchers) from the start —
+        the blue/green replanner's pre-swap phase."""
         dag.validate()
+        if dag.generation == 0:
+            dag.generation = next(self._gen_counter)
+        return dag
+
+    def register_dag(self, dag: RuntimeDag, plan=None):
+        """Register (or atomically swap in) a runtime DAG; ``plan`` (the
+        PhysicalPlan it was lowered from) is kept for introspection and
+        bucket retuning.  Re-registering under an existing name is a
+        blue/green generation swap: new ``call_dag`` requests route to the
+        new generation immediately, in-flight executions finish on the old
+        generation's nodes and batchers, and the old generation's batchers
+        are retired once its last in-flight request completes — then
+        closed when they are quiescent (no queued items, no active
+        flush)."""
+        self.prepare_dag(dag)
         old = self.dags.get(dag.name)
-        if old is not None:
-            # detach the old deployment's batchers: their closures captured
-            # the old nodes, but they must still drain in-flight requests
-            with self._batchers_lock:
-                for node_name in old.nodes:
-                    b = self._batchers.pop(node_name, None)
-                    if b is not None:
-                        self._retired_batchers.append(b)
-        # close retired batchers that have drained (bounds thread leakage
-        # across repeated re-registrations)
-        still_draining = []
-        for b in self._retired_batchers:
-            if b.q.empty():
-                b.close()
-            else:
-                still_draining.append(b)
-        self._retired_batchers = still_draining
+        with self._lifecycle_lock:
+            # re-activating a previously swapped-out generation
+            # (swap-back/rollback) must clear BOTH lifecycle marks: left
+            # in _retired_gens its fresh batchers would be re-retired
+            # after every request; left in _draining, the drain-to-zero
+            # of its pre-swap in-flight requests would retire the now
+            # LIVE generation's batchers out from under traffic.
+            # Cleared BEFORE the registry write — a request completing
+            # between publish and clear would re-retire the live
+            # generation through the stale marks.
+            self._retired_gens.discard((dag.name, dag.generation))
+            self._draining.discard((dag.name, dag.generation))
+        # the swap: a single dict assignment — call_dag reads the mapping
+        # once per request, so every request runs entirely on one
+        # generation (the GIL makes the read/replace atomic)
         self.dags[dag.name] = dag
         if plan is not None:
             self.plans[dag.name] = plan
+        if old is not None and old is not dag:
+            key = (old.name, old.generation)
+            with self._lifecycle_lock:
+                busy = self._inflight.get(key, 0) > 0
+                if busy:
+                    self._draining.add(key)
+            if not busy:
+                self._retire_generation(*key)
+        self.sweep_retired()
 
     def register_plan(self, plan, name: str) -> RuntimeDag:
         """Lower a ``PhysicalPlan`` and register it in one step."""
         dag = RuntimeDag.from_plan(plan, name)
         self.register_dag(dag, plan=plan)
         return dag
+
+    def _retire_generation(self, dag_name: str, generation: int) -> None:
+        """Move a superseded generation's batchers out of the live table;
+        they drain whatever they still hold and are closed by the sweep."""
+        with self._lifecycle_lock:
+            self._retired_gens.add((dag_name, generation))
+        with self._batchers_lock:
+            keys = [k for k in self._batchers
+                    if k[0] == dag_name and k[1] == generation]
+            for k in keys:
+                self._retired_batchers.append(self._batchers.pop(k))
+
+    def discard_dag(self, dag: RuntimeDag) -> None:
+        """Discard a PREPARED generation that will never serve (an
+        aborted blue/green replan): retire its batchers — created by
+        warm-up/canary traffic — so their threads are closed by the sweep
+        instead of leaking, and mark the generation retired so any
+        straggler execution re-retires what it creates.  A registered
+        generation must be superseded via ``register_dag``, not
+        discarded."""
+        if self.dags.get(dag.name) is dag:
+            raise ValueError(f"{dag.name} gen {dag.generation} is live; "
+                             "swap it out via register_dag instead")
+        self._retire_generation(dag.name, dag.generation)
+        self.sweep_retired()
+
+    def sweep_retired(self) -> int:
+        """Close retired batchers that have fully drained — queue empty
+        AND no flush in progress (``Batcher.quiescent``; ``q.empty()``
+        alone races with an active flush whose popped items are still
+        live).  Returns how many are still draining.  Bounds thread
+        leakage across repeated re-registrations."""
+        with self._batchers_lock:
+            still, done = [], []
+            for b in self._retired_batchers:
+                (done if b.quiescent() else still).append(b)
+            self._retired_batchers = still
+        for b in done:
+            b.close()
+        return len(still)
+
+    def _track_execution(self, dag: RuntimeDag, fut: Future) -> None:
+        """Count an execution against its generation; when a DRAINING (or
+        already-superseded) generation's count reaches zero, retire its
+        batchers."""
+        key = (dag.name, dag.generation)
+        with self._lifecycle_lock:
+            self._inflight[key] = self._inflight.get(key, 0) + 1
+
+        def _done(_f: Future):
+            retire = False
+            with self._lifecycle_lock:
+                n = self._inflight.get(key, 1) - 1
+                if n <= 0:
+                    self._inflight.pop(key, None)
+                    # superseded generation fully drained — or a batcher
+                    # created by a straggler execution AFTER its
+                    # generation was retired.  (A PREPARED, never-swapped
+                    # generation is in neither set: its warm batchers
+                    # survive until the swap makes them live.)
+                    if key in self._draining or key in self._retired_gens:
+                        self._draining.discard(key)
+                        retire = True
+                else:
+                    self._inflight[key] = n
+            if retire:
+                self._retire_generation(*key)
+                self.sweep_retired()
+        fut.add_done_callback(_done)
 
     # -- scheduling -------------------------------------------------------------
     def pick_executor(self, node: RuntimeNode,
@@ -111,10 +224,11 @@ class Runtime:
 
     def dispatch(self, node: RuntimeNode, tables: List[Table],
                  produced_on: List[Optional[str]], callback,
-                 locality_key: Optional[str] = None):
+                 locality_key: Optional[str] = None,
+                 dag: Optional[RuntimeDag] = None):
         if node.batching:
             self._dispatch_batched(node, tables, produced_on, callback,
-                                   locality_key)
+                                   locality_key, dag)
             return
         # a device-resident input lives in its producer's accelerator
         # memory: the consumer MUST run there — shipping the batch to
@@ -150,14 +264,28 @@ class Runtime:
             return {k: list(v) for k, v in self.metrics.items()}
 
     # -- online reconfiguration (SLO controller hot-apply) --------------------
-    def configure_batching(self, node_name: str, *,
+    def batcher_for(self, dag_name: str, node_name: str,
+                    generation: Optional[int] = None) -> Optional[Batcher]:
+        """The live Batcher serving ``(dag, node)`` — by default the
+        currently registered generation's."""
+        if generation is None:
+            dag = self.dags.get(dag_name)
+            if dag is None:
+                return None
+            generation = dag.generation
+        with self._batchers_lock:
+            return self._batchers.get((dag_name, generation, node_name))
+
+    def configure_batching(self, dag_name: str, node_name: str, *,
                            max_batch: Optional[int] = None,
                            batch_wait_ms: Optional[float] = None) -> bool:
         """Set a node's batching knobs — applied to its LIVE batcher (the
         batch loop reads them per iteration) and remembered for batchers
-        created later.  Pure control plane: no re-registration, no
-        executable re-trace.  Returns True if anything changed."""
-        cfg = self._node_batch_cfg.setdefault(node_name, {})
+        created later.  The config is keyed logically (dag, node), so a
+        replanned green generation inherits it where node names match.
+        Pure control plane: no re-registration, no executable re-trace.
+        Returns True if anything changed."""
+        cfg = self._node_batch_cfg.setdefault((dag_name, node_name), {})
         changed = False
         if max_batch is not None and cfg.get("max_batch") != int(max_batch):
             cfg["max_batch"] = int(max_batch)
@@ -166,8 +294,7 @@ class Runtime:
                 cfg.get("batch_wait_ms") != float(batch_wait_ms):
             cfg["batch_wait_ms"] = float(batch_wait_ms)
             changed = True
-        with self._batchers_lock:
-            b = self._batchers.get(node_name)
+        b = self.batcher_for(dag_name, node_name)
         if b is not None and changed:
             b.reconfigure(max_batch=cfg.get("max_batch"),
                           max_wait_ms=cfg.get("batch_wait_ms"))
@@ -190,32 +317,45 @@ class Runtime:
                 op.bucket_sizes = tuple(buckets)
 
     def _dispatch_batched(self, node: RuntimeNode, tables, produced_on,
-                          callback, locality_key: Optional[str] = None):
+                          callback, locality_key: Optional[str] = None,
+                          dag: Optional[RuntimeDag] = None):
         """Queue one request into the node's batcher.  The batch function
         issues ONE executor submission per batch — a single vmapped XLA
         dispatch when the node lowered to a ``BatchedJittedFuse``
         (``node.batched_fn``) — and demultiplexes results back to each
         request's callback from the executor callback (no per-request
-        waiter threads)."""
+        waiter threads).  Batchers are keyed ``(dag, generation, node)``:
+        two DAGs sharing a node name — or two generations of one DAG mid
+        blue/green swap — never share a batcher, whose batch fn captured
+        exactly one generation's node closure."""
+        dag_name = dag.name if dag is not None else ""
+        generation = dag.generation if dag is not None else 0
+        key = (dag_name, generation, node.name)
         with self._batchers_lock:
             # creation must be atomic: two concurrent first-dispatches used
             # to each build a Batcher, and the loser's requests ran outside
             # the shared queue (phantom batches, skewed histograms)
-            b = self._batchers.get(node.name)
+            b = self._batchers.get(key)
             if b is None:
-                cfg = self._node_batch_cfg.get(node.name, {})
-                b = Batcher(self._make_batch_fn(node),
+                cfg = self._node_batch_cfg.get((dag_name, node.name), {})
+                # on_drop: a submit can slip in between the sweep's
+                # quiescence check and close() — the drained item's
+                # request callback must still fire, or its future would
+                # hang forever (nobody waits on Batcher item events here)
+                b = Batcher(self._make_batch_fn(node, dag_name),
                             max_batch=int(cfg.get("max_batch",
                                                   self.max_batch)),
                             max_wait_ms=float(cfg.get("batch_wait_ms",
-                                                      self.batch_wait_ms)))
-                self._batchers[node.name] = b
+                                                      self.batch_wait_ms)),
+                            on_drop=lambda args, err: args[2](None, err,
+                                                              None))
+                self._batchers[key] = b
         try:
             b.submit((tables, produced_on, callback, locality_key))
         except RuntimeError as e:       # closed under our feet (stop())
             callback(None, e, None)
 
-    def _make_batch_fn(self, node: RuntimeNode):
+    def _make_batch_fn(self, node: RuntimeNode, dag_name: str = ""):
         def batched(arg_list):
             # merge all request tables into one invocation (paper §4)
             live = []
@@ -255,12 +395,19 @@ class Runtime:
             item = WorkItem(fn=fn, tables=[big], produced_on=[None],
                             callback=None)
 
+            # metric series are keyed by (dag, node) so two DAGs sharing a
+            # node name don't interleave their histograms (generations of
+            # one DAG intentionally share a series — the controller reads
+            # one continuous signal across a blue/green swap)
+            mkey = f"batch/{dag_name}/{node.name}" if dag_name \
+                else f"batch/{node.name}"
+
             def demux(result, error, exec_id):
                 lat = time.perf_counter() - t_submit
-                self.record_metric(f"batch/{node.name}/size", len(big.rows))
-                self.record_metric(f"batch/{node.name}/latency_s", lat)
+                self.record_metric(f"{mkey}/size", len(big.rows))
+                self.record_metric(f"{mkey}/latency_s", lat)
                 if item.exec_s is not None:
-                    self.record_metric(f"batch/{node.name}/exec_s",
+                    self.record_metric(f"{mkey}/exec_s",
                                        item.exec_s)
                 if error is not None:
                     for _, _, cb, _ in live:
@@ -344,21 +491,48 @@ class Runtime:
 
     # -- execution ----------------------------------------------------------------
     def call_dag(self, name: str, table: Table) -> Future:
-        dag = self.dags[name]
-        fut: Future = Future()
-        # arrival + end-to-end latency series: what the SLO controller's
-        # rate estimate and the benchmark's measured p99 read back
-        t0 = time.perf_counter()
-        self.record_metric(f"dag/{name}/request_t", t0)
+        # ONE registry read per request: the whole execution runs on the
+        # generation that was live at arrival, even if a blue/green swap
+        # lands mid-flight
+        return self.call_dag_object(self.dags[name], table, record=True)
 
-        def _record(f: Future):
-            try:
-                if f.exception() is None:
-                    self.record_metric(f"dag/{name}/latency_s",
-                                       time.perf_counter() - t0)
-            except BaseException:
-                pass
-        fut.add_done_callback(_record)
+    def call_dag_object(self, dag: RuntimeDag, table: Table, *,
+                        record: bool = False) -> Future:
+        """Execute a DAG *object* directly, registered or not — the
+        blue/green replanner drives warm-up and canary requests through a
+        prepared (not yet traffic-visible) green generation this way.
+        ``record=False`` keeps synthetic requests out of the
+        ``dag/<name>/…`` series the SLO controller measures."""
+        fut: Future = Future()
+        t0 = time.perf_counter()
+        if record:
+            name = dag.name
+            # arrival + end-to-end latency series: what the SLO
+            # controller's rate estimate and the benchmark's measured p99
+            # read back
+            self.record_metric(f"dag/{name}/request_t", t0)
+
+            def _record(f: Future):
+                lat = time.perf_counter() - t0
+                try:
+                    failed = f.exception() is not None
+                except BaseException:
+                    failed = True
+                if not failed:
+                    self.record_metric(f"dag/{name}/latency_s", lat)
+                else:
+                    # error-path latency goes to its OWN series plus an
+                    # error counter whose values are completion
+                    # timestamps (len = count, values = the window the
+                    # controller rates errors over).  Folding failures
+                    # into latency_s — or dropping them, as we used to —
+                    # makes the measured p99 improve exactly when the
+                    # system degrades.
+                    self.record_metric(f"dag/{name}/error_latency_s", lat)
+                    self.record_metric(f"dag/{name}/error_t",
+                                       time.perf_counter())
+            fut.add_done_callback(_record)
+        self._track_execution(dag, fut)
         _DagExecution(self, dag, table, fut).start()
         return fut
 
@@ -426,7 +600,8 @@ class _DagExecution:
                 except KeyError:
                     pass
             self.rt.dispatch(node, tables, srcs,
-                             self._make_callback(node), locality_key)
+                             self._make_callback(node), locality_key,
+                             dag=self.dag)
 
     def _make_callback(self, node: RuntimeNode):
         def cb(result, error, exec_id):

@@ -14,6 +14,12 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 
+#: queued by close() to wake the batch loop out of its poll immediately —
+#: without it, close() blocks its caller (possibly an executor callback
+#: thread on the serving path) for up to the full poll timeout
+_WAKE = object()
+
+
 class BatchItem:
     __slots__ = ("args", "event", "result", "error", "enqueue_t")
 
@@ -46,14 +52,26 @@ class Batcher:
 
     def __init__(self, fn: Callable[[List[Any]], List[Any]], *,
                  max_batch: int = 10, max_wait_ms: float = 2.0,
-                 adaptive_wait: bool = True):
+                 adaptive_wait: bool = True,
+                 on_drop: Optional[Callable[[Any, BaseException],
+                                            None]] = None):
         self.fn = fn
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1000.0
         self.adaptive_wait = adaptive_wait
+        # called (args, error) for items failed by close()'s drain: a
+        # caller whose waiters are callbacks buried in ``args`` (the
+        # runtime) would otherwise hang them — nobody waits on
+        # ``item.event`` there, so the event alone reaches no one
+        self.on_drop = on_drop
         self.q: "queue.Queue[BatchItem]" = queue.Queue()
         self._stop = False
         self._lock = threading.Lock()       # serializes submit vs close
+        # items accepted but not yet completed (queued OR popped into an
+        # in-progress flush).  ``q.empty()`` alone is NOT a drain signal:
+        # the batch loop pops items before running fn, so the queue can be
+        # empty while a flush still holds live requests
+        self._pending = 0
         self._gap_ewma: Optional[float] = None
         self._last_submit_t: Optional[float] = None
         self._thread = threading.Thread(target=self._loop, daemon=True)
@@ -76,8 +94,17 @@ class Batcher:
                     ((1.0 - self.GAP_ALPHA) * self._gap_ewma
                      + self.GAP_ALPHA * gap)
             self._last_submit_t = item.enqueue_t
+            self._pending += 1
             self.q.put(item)
         return item
+
+    def quiescent(self) -> bool:
+        """True when the batcher holds NO live requests: nothing queued
+        *and* no flush in progress.  This is the drain signal retirement
+        logic must use — ``q.empty()`` races with an active flush whose
+        popped items are still being served."""
+        with self._lock:
+            return self._pending == 0
 
     def reconfigure(self, *, max_batch: Optional[int] = None,
                     max_wait_ms: Optional[float] = None) -> None:
@@ -125,6 +152,8 @@ class Batcher:
                 first = self.q.get(timeout=0.1)
             except queue.Empty:
                 continue
+            if first is _WAKE:
+                continue                    # close() signal; re-check _stop
             items = [first]
             deadline = time.perf_counter() + self.effective_wait()
             while len(items) < self.max_batch:
@@ -132,9 +161,12 @@ class Batcher:
                 if remaining <= 0:
                     break
                 try:
-                    items.append(self.q.get(timeout=remaining))
+                    nxt = self.q.get(timeout=remaining)
                 except queue.Empty:
                     break
+                if nxt is _WAKE:
+                    break                   # flush what we hold, then exit
+                items.append(nxt)
             self.batch_sizes.append(len(items))
             try:
                 results = self.fn([it.args for it in items])
@@ -145,6 +177,8 @@ class Batcher:
                     it.error = e
             for it in items:
                 it.event.set()
+            with self._lock:
+                self._pending -= len(items)
 
     def close(self):
         """Stop the batch thread and fail anything still queued.
@@ -158,11 +192,26 @@ class Batcher:
             if self._stop:
                 return
             self._stop = True
-        self._thread.join(timeout=1.0)
+        # wake the loop out of its poll so the join below returns
+        # promptly — close() may run on an executor callback thread (the
+        # generation-drain path), where a poll-timeout-long block would
+        # stall the serving hot path
+        self.q.put(_WAKE)
+        if threading.current_thread() is not self._thread:
+            self._thread.join(timeout=1.0)
         while True:
             try:
                 it = self.q.get_nowait()
             except queue.Empty:
                 break
+            if it is _WAKE:
+                continue
             it.error = RuntimeError("batcher closed before dispatch")
             it.event.set()
+            if self.on_drop is not None:
+                try:
+                    self.on_drop(it.args, it.error)
+                except BaseException:
+                    pass
+            with self._lock:
+                self._pending -= 1

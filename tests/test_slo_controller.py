@@ -129,7 +129,7 @@ def test_controller_hot_applies_sparse_to_dense():
         assert ev1.kind == "apply", ev1
         cfg1 = ctl.applied.nodes[op_id]
         assert cfg1.max_batch == 1 and cfg1.batch_wait_ms == 0.0
-        batcher = rt._batchers[node.name]
+        batcher = rt.batcher_for(dep.dag.name, node.name)
         assert batcher.max_wait == 0.0
         buckets_sparse = tuple(node.batch_buckets)
 
@@ -154,7 +154,7 @@ def test_controller_hot_applies_sparse_to_dense():
         # the deployed flow's batcher window and max-batch moved
         assert cfg2.max_batch > 1
         assert cfg2.batch_wait_ms > 0.0
-        assert rt._batchers[node.name] is batcher      # same live batcher
+        assert rt.batcher_for(dep.dag.name, node.name) is batcher
         assert batcher.max_wait == pytest.approx(
             cfg2.batch_wait_ms / 1e3)
         assert batcher.max_batch == cfg2.max_batch
@@ -259,14 +259,14 @@ def test_configure_batching_before_first_dispatch():
         fl.output = fl.map(f, names=["y"], batching=True)
         dep = fl.deploy(rt)
         node = next(n for n in dep.dag.nodes.values() if n.batching)
-        assert rt.configure_batching(node.name, max_batch=3,
+        assert rt.configure_batching(dep.dag.name, node.name, max_batch=3,
                                      batch_wait_ms=1.0)
         # unchanged values report no change
-        assert not rt.configure_batching(node.name, max_batch=3,
-                                         batch_wait_ms=1.0)
+        assert not rt.configure_batching(dep.dag.name, node.name,
+                                         max_batch=3, batch_wait_ms=1.0)
         out = dep.execute(Table([("x", int)], [(4,)])).result(timeout=10)
         assert out.rows[0].values[0] == 40
-        b = rt._batchers[node.name]
+        b = rt.batcher_for(dep.dag.name, node.name)
         assert b.max_batch == 3 and b.max_wait == pytest.approx(1e-3)
     finally:
         rt.stop()
