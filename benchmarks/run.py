@@ -18,8 +18,14 @@ relative error, and SLO attainment of the optimizer's PlanConfig vs the
 default config across arrival rates; ``replan`` -> ``BENCH_replan.json``:
 steady-state vs during-swap p99 across a controller-initiated blue/green
 swap, dropped/errored request counts, and the post-swap executable
-re-trace count — all must stay at zero drops / zero re-traces) so CI can
-track the perf trajectory across PRs.
+re-trace count — all must stay at zero drops / zero re-traces;
+``model_serving`` -> ``BENCH_model_serving.json``: per-request p50/p99
+for the video pipeline and the prefill->decode cascade, greedy-token
+parity for the fused cascade, Pallas-kernel-vs-reference step latency
+and chain parity, single-dispatch-per-batch and zero-retrace checks for
+placed kernel chains, and the SLO controller's propose->hot-apply
+outcome against ModelOp-measured curves) so CI can track the perf
+trajectory across PRs.
 """
 from __future__ import annotations
 
@@ -28,7 +34,8 @@ import sys
 import time
 
 SUITES = ("fusion", "jit_fusion", "competitive", "autoscaling", "locality",
-          "batching", "slo_planner", "replan", "pipelines", "roofline")
+          "batching", "slo_planner", "replan", "model_serving",
+          "pipelines", "roofline")
 
 
 def main() -> None:
@@ -83,6 +90,11 @@ def main() -> None:
             duration_s=5.0 if args.fast else 10.0,
             rate_hz=80.0 if args.fast else 120.0,
             json_path="BENCH_replan.json" if args.json else None))
+    if "model_serving" in only:
+        from benchmarks import model_serving
+        emit(model_serving.run(
+            n_requests=12 if args.fast else 30,
+            json_path="BENCH_model_serving.json" if args.json else None))
     if "pipelines" in only:
         from benchmarks import pipelines
         emit(pipelines.run(n=8 if args.fast else 16))

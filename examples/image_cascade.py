@@ -1,86 +1,123 @@
-"""Model cascade (paper §3.2 Fig 3 / §5.2 image cascade).
+"""Model cascade (paper §3.2 Fig 3 / §5.2 image cascade), on the compiled
+serving path.
 
-A cheap model answers first; low-confidence inputs escalate to a larger
-model; a left join merges both paths.  Shows the fusion rewrite collapsing
-the chain and the cascade skipping the expensive model when confident.
+A cheap model answers first; low-confidence rows escalate to a larger
+model; a left join merges both paths.  The escalation branch is a GPU
+``filter -> map`` chain the compiler fuses and lowers with the filter
+evaluated *inside* the jitted body (masked rows compact only at the
+device->host boundary), so the cascade's branch decision costs no extra
+dispatch.
 
   PYTHONPATH=src python examples/image_cascade.py
 """
 import time
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_tiny_config
+from repro.core.compiler import compile_flow
 from repro.core.dataflow import Dataflow
 from repro.core.table import Table
 from repro.models import build_model
 from repro.runtime import NetModel, Runtime
 
 THRESHOLD = 0.5
+SEQ = 16
 
 
-def load(arch, seed, temp):
+def _forward(arch, seed, temp):
+    """Per-row forward closure (tokens [S] -> class probs [V]) over a
+    built registry model — pure jnp, so it vmaps inside lowered chains."""
     cfg = get_tiny_config(arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
 
-    @jax.jit
-    def fwd(tokens):
-        logits, _ = model.logits(params, {"tokens": tokens}, remat=False)
-        return jax.nn.softmax(logits[:, -1] / temp)
+    def probs(tokens):
+        logits, _ = model.logits(params, {"tokens": tokens[None]},
+                                 remat=False)
+        return jax.nn.softmax(logits[0, -1].astype(jnp.float32) / temp)
 
-    return fwd
+    return probs, cfg.vocab_size
 
 
-def main():
-    simple_fwd = load("yi-9b", 0, temp=1.0)
-    complex_fwd = load("granite-34b", 1, temp=0.05)  # sharp => confident
+def build(rt, *, name="cascade"):
+    simple_fwd, v = _forward("yi-9b", 0, temp=1.0)
+    complex_fwd, _ = _forward("granite-34b", 1, temp=0.05)  # sharp
 
-    def preproc(img: np.ndarray) -> np.ndarray:
-        return (img[:16] * 255).astype(np.int32) % 500
+    def gate(tokens: jax.Array) -> jax.Array:
+        return jnp.clip(tokens, 0, v - 1)
 
-    def simple(tokens: np.ndarray) -> tuple[np.ndarray, str, float]:
-        p = np.asarray(simple_fwd(jnp.asarray(tokens)[None]))[0]
-        return tokens, f"class{int(p.argmax())}", float(p.max())
+    def simple(tokens: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        p = simple_fwd(tokens)
+        return tokens, jnp.argmax(p).astype(jnp.int32), jnp.max(p)
 
-    def low_confidence(tokens: np.ndarray, label: str, conf: float) -> bool:
+    def low_confidence(tokens: jax.Array, idx: jax.Array,
+                       conf: jax.Array) -> bool:
         return conf < THRESHOLD
 
-    def complex_model(tokens: np.ndarray, label: str,
-                      conf: float) -> tuple[str, float]:
-        p = np.asarray(complex_fwd(jnp.asarray(tokens)[None]))[0]
-        return f"class{int(p.argmax())}", float(p.max())
+    def complex_model(tokens: jax.Array, idx: jax.Array,
+                      conf: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        p = complex_fwd(tokens)
+        return jnp.argmax(p).astype(jnp.int32), jnp.max(p)
 
-    def best(tokens: np.ndarray, label: str, conf: float, clabel: str,
-             cconf: float) -> tuple[str, float]:
+    def lab_simple(tokens: jax.Array, idx: jax.Array,
+                   conf: jax.Array) -> Tuple[str, float]:
+        return f"class{int(idx)}", float(conf)
+
+    def lab_complex(cidx: jax.Array, cconf: jax.Array) -> Tuple[str, float]:
+        return f"class{int(cidx)}", float(cconf)
+
+    def best(label: str, conf: float, clabel: str,
+             cconf: float) -> Tuple[str, float]:
         if clabel is not None and cconf > conf:
             return clabel, cconf
         return label, conf
 
-    fl = Dataflow([("img", np.ndarray)])
-    s = fl.map(preproc, names=["tokens"]).map(
-        simple, names=["tokens", "label", "conf"])
-    c = s.filter(low_confidence).map(complex_model, names=["clabel",
-                                                           "cconf"])
-    fl.output = s.join(c, how="left").map(best, names=["label", "conf"])
+    fl = Dataflow([("tokens", jax.Array)])
+    s = fl.map(gate, names=["tokens"], gpu=True).map(
+        simple, names=["tokens", "idx", "conf"], gpu=True)
+    c = s.filter(low_confidence, gpu=True).map(
+        complex_model, names=["cidx", "cconf"], gpu=True)
+    slab = s.map(lab_simple, names=["label", "conf"])
+    clab = c.map(lab_complex, names=["clabel", "cconf"])
+    fl.output = slab.join(clab, how="left").map(best,
+                                                names=["label", "conf"])
+    return compile_flow(fl, rt, fusion=True, name=name)
 
-    rt = Runtime(n_cpu=4, net=NetModel(scale=0.0))
-    fl.deploy(rt, fusion=True)
-    rng = np.random.default_rng(0)
-    escalated = 0
-    for i in range(6):
-        t0 = time.perf_counter()
-        out = fl.execute(Table([("img", np.ndarray)],
-                               [(rng.random(64),)])).result(60)
-        d = out.to_dicts()[0]
-        esc = d["conf"] >= THRESHOLD and "granite" or "yi"
-        escalated += d["conf"] >= THRESHOLD
-        print(f"img{i}: {d['label']} conf={d['conf']:.2f} "
-              f"({(time.perf_counter()-t0)*1e3:.1f} ms)")
-    rt.stop()
-    print(f"cascade escalated on low confidence; threshold={THRESHOLD}")
+
+def run(images: int = 6, *, verbose: bool = False):
+    """Headless run; returns a metrics dict (used by the smoke test)."""
+    rt = Runtime(n_cpu=4, n_gpu=1, net=NetModel(scale=0.0))
+    try:
+        dep = build(rt)
+        rng = np.random.default_rng(0)
+        escalated, labels, lats = 0, [], []
+        for i in range(images):
+            toks = jnp.asarray(rng.integers(0, 500, SEQ), jnp.int32)
+            t0 = time.perf_counter()
+            out = dep.execute(Table([("tokens", jax.Array)],
+                                    [(toks,)])).result(60)
+            lats.append(time.perf_counter() - t0)
+            d = out.to_dicts()[0]
+            labels.append(d["label"])
+            escalated += d["conf"] >= THRESHOLD
+            if verbose:
+                print(f"img{i}: {d['label']} conf={d['conf']:.2f} "
+                      f"({lats[-1] * 1e3:.1f} ms)")
+        return {"images": images, "escalated": int(escalated),
+                "labels": labels,
+                "median_ms": sorted(lats)[len(lats) // 2] * 1e3}
+    finally:
+        rt.stop()
+
+
+def main():
+    r = run(verbose=True)
+    print(f"cascade: {r['escalated']}/{r['images']} answered confidently; "
+          f"threshold={THRESHOLD}, median {r['median_ms']:.1f} ms")
 
 
 if __name__ == "__main__":

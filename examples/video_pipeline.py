@@ -1,76 +1,135 @@
-"""Real-time video analysis pipeline (paper §5.2 Video Streams).
+"""Real-time video analysis pipeline (paper §5.2 Video Streams), on the
+compiled serving path.
 
-frames -> detector -> {people classifier, vehicle classifier} in parallel
--> union -> groupby(label) -> count, with operator fusion.  The paper's
-headline result is meeting real-time latency on this pipeline.
+    frames -> detector (a registry VLM as a ``ModelOp``)
+           -> {people head, vehicles head} in parallel (fused, lowered
+              to batched XLA chains)
+           -> union -> groupby(label) -> count
+
+The detector is a real model wrapped as a first-class plan operator
+(``model_stage_op``), so the SLO controller plans against its *measured*
+cost curve; the classifier heads are two-step GPU chains the compiler
+fuses and lowers to one vmapped XLA dispatch per batch.
 
   PYTHONPATH=src python examples/video_pipeline.py
 """
 import time
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_tiny_config
+from repro.core.compiler import compile_flow
 from repro.core.dataflow import Dataflow
 from repro.core.table import Table
 from repro.models import build_model
+from repro.models.registry import model_stage_op
+from repro.profiling.controller import SLOController
+from repro.profiling.profiler import profile_plan, seed_from_model_ops
 from repro.runtime import NetModel, Runtime
 
+SEQ = 16
 
-def load(arch, seed):
-    cfg = get_tiny_config(arch)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(seed))
 
-    @jax.jit
-    def fwd(tokens):
-        logits, _ = model.logits(params, {"tokens": tokens}, remat=False)
-        return logits[:, -1]
+def build(rt, *, name="video"):
+    """Compile the pipeline onto ``rt``; returns the deployed flow."""
+    cfg = get_tiny_config("llama-3.2-vision-11b")   # detector stand-in
+    detector = build_model(cfg)
+    params = detector.init(jax.random.PRNGKey(0))
+    det_op = model_stage_op(detector, params, "logits",
+                            model_name="detector", seq_len=SEQ)
+    v = cfg.vocab_size
+    kp, kv_ = jax.random.split(jax.random.PRNGKey(1))
+    w_people = jax.random.normal(kp, (v, 8), jnp.float32) * 0.1
+    w_vehicle = jax.random.normal(kv_, (v, 8), jnp.float32) * 0.1
 
-    fwd(jnp.ones((1, 16), jnp.int32)).block_until_ready()
-    return fwd
+    def people_proj(det: jax.Array) -> jax.Array:
+        return det.astype(jnp.float32) @ w_people
+
+    def vehicle_proj(det: jax.Array) -> jax.Array:
+        return det.astype(jnp.float32) @ w_vehicle
+
+    def score(h: jax.Array) -> jax.Array:
+        return jax.nn.softmax(h)
+
+    def label_people(s: jax.Array) -> Tuple[str, float]:
+        return f"person-{int(np.argmax(s)) % 3}", float(np.max(s))
+
+    def label_vehicle(s: jax.Array) -> Tuple[str, float]:
+        return f"vehicle-{int(np.argmax(s)) % 3}", float(np.max(s))
+
+    def gate(tokens: jax.Array) -> jax.Array:
+        return jnp.clip(tokens, 0, v - 1)
+
+    fl = Dataflow([("tokens", jax.Array)])
+    # gate fuses with the detector ModelOp into one lowered chain, so the
+    # detector serves batches as a single XLA dispatch (native batch via
+    # the ModelOp's custom_vmap rule)
+    det = fl.map(gate, names=["tokens"], gpu=True).apply_op(det_op,
+                                                            gpu=True)
+    pa = det.map(people_proj, names=["h"], gpu=True).map(
+        score, names=["s"], gpu=True)
+    pb = det.map(vehicle_proj, names=["h"], gpu=True).map(
+        score, names=["s"], gpu=True)
+    la = pa.map(label_people, names=["label", "conf"])
+    lb = pb.map(label_vehicle, names=["label", "conf"])
+    fl.output = la.union(lb).groupby("label").agg("count", "label")
+    return compile_flow(fl, rt, fusion=True, name=name)
+
+
+def _frame(rng, v=500):
+    return (jnp.asarray(rng.integers(0, v, SEQ), jnp.int32),)
+
+
+def run(frames: int = 4, *, controller: bool = True, verbose: bool = False):
+    """Headless run; returns a metrics dict (used by the smoke test)."""
+    rt = Runtime(n_cpu=4, n_gpu=1, net=NetModel(scale=0.0))
+    try:
+        dep = build(rt)
+        rng = np.random.default_rng(0)
+        profile = None
+        if controller:
+            # build the controller's model BEFORE traffic (so the tick
+            # sees a fresh arrival window): ModelOp-measured curves for
+            # the detector chain, a quick sweep for everything else
+            profile = seed_from_model_ops(dep.plan, batch_sizes=(1, 2, 4))
+            sample = Table([("tokens", jax.Array)], [_frame(rng)])
+            swept = profile_plan(dep.plan, sample, batch_sizes=(1, 2),
+                                 runs=1, warmup=1)
+            for k, c in swept.curves.items():
+                profile.curves.setdefault(k, c)
+        lats, counts = [], []
+        for i in range(frames):
+            t0 = time.perf_counter()
+            out = dep.execute(Table([("tokens", jax.Array)],
+                                    [_frame(rng)])).result(60)
+            lats.append(time.perf_counter() - t0)
+            counts.append(out.to_dicts())
+            if verbose:
+                print(f"frame {i}: {counts[-1]} ({lats[-1] * 1e3:.1f} ms)")
+        med = sorted(lats)[len(lats) // 2]
+        result = {"frames": frames, "median_ms": med * 1e3,
+                  "p99_ms": max(lats) * 1e3,
+                  "labels_per_frame": len(counts[-1])}
+        if controller:
+            ctl = SLOController(rt, dep, slo_p99_s=0.5, profile=profile,
+                                replan_cooldown_s=1e9)
+            ev = ctl.tick()
+            result["controller"] = ev.kind
+            if verbose:
+                print(f"controller tick: {ev.kind} {ev.detail}")
+        return result
+    finally:
+        rt.stop()
 
 
 def main():
-    yolo = load("llama-3.2-vision-11b", 0)   # detector stand-in (vlm arch!)
-    people = load("yi-9b", 1)
-    vehicles = load("glm4-9b", 2)
-
-    def detect(clip: np.ndarray) -> np.ndarray:
-        toks = (clip[:16] * 255).astype(np.int32) % 500
-        _ = np.asarray(yolo(jnp.asarray(toks)[None]))
-        return toks
-
-    def classify_people(toks: np.ndarray) -> tuple[str, float]:
-        o = np.asarray(people(jnp.asarray(toks)[None]))[0]
-        return f"person-{int(o.argmax()) % 3}", float(o.max())
-
-    def classify_vehicles(toks: np.ndarray) -> tuple[str, float]:
-        o = np.asarray(vehicles(jnp.asarray(toks)[None]))[0]
-        return f"vehicle-{int(o.argmax()) % 3}", float(o.max())
-
-    fl = Dataflow([("clip", np.ndarray)])
-    d = fl.map(detect, names=["toks"])
-    a = d.map(classify_people, names=["label", "conf"])
-    b = d.map(classify_vehicles, names=["label", "conf"])
-    fl.output = a.union(b).groupby("label").agg("count", "label")
-
-    rt = Runtime(n_cpu=4, net=NetModel())
-    fl.deploy(rt, fusion=True)
-    rng = np.random.default_rng(0)
-    lats = []
-    for i in range(6):
-        t0 = time.perf_counter()
-        out = fl.execute(Table([("clip", np.ndarray)],
-                               [(rng.random(30 * 64),)])).result(60)
-        lats.append(time.perf_counter() - t0)
-        print(f"clip {i}: {out.to_dicts()} ({lats[-1]*1e3:.1f} ms)")
-    med = sorted(lats)[len(lats) // 2]
-    print(f"median {med*1e3:.1f} ms -> "
-          f"{'REAL-TIME (<1s/clip)' if med < 1.0 else 'over budget'}")
-    rt.stop()
+    r = run(frames=6, verbose=True)
+    rt_ok = r["median_ms"] < 1000.0
+    print(f"median {r['median_ms']:.1f} ms -> "
+          f"{'REAL-TIME (<1s/frame)' if rt_ok else 'over budget'}")
 
 
 if __name__ == "__main__":

@@ -33,6 +33,7 @@ def compile_flow(flow: Dataflow, runtime, *, fusion: bool = False,
                  competitive_exec: bool = False, locality: bool = False,
                  jit_fusion: bool = True, batched_lowering: bool = True,
                  default_replicas: int = 3,
+                 place_kernels: bool = True,
                  pipeline: Optional[PassPipeline] = None,
                  plan_config=None,
                  name: Optional[str] = None,
@@ -59,13 +60,15 @@ def compile_flow(flow: Dataflow, runtime, *, fusion: bool = False,
         "fusion": fusion, "competitive_exec": competitive_exec,
         "locality": locality, "jit_fusion": jit_fusion,
         "batched_lowering": batched_lowering,
-        "default_replicas": default_replicas}
+        "default_replicas": default_replicas,
+        "place_kernels": place_kernels}
     if pipeline is None:
         pipeline = build_pipeline(
             fusion=fusion, competitive_exec=competitive_exec,
             locality=locality, jit_fusion=jit_fusion,
             batched_lowering=batched_lowering,
             default_replicas=default_replicas,
+            place_kernels=place_kernels,
             plan_config=plan_config)
     ctx = PassContext()
     plan = pipeline.run(plan, ctx)

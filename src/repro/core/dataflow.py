@@ -46,6 +46,11 @@ class Node:
     def filter(self, fn: Callable, **hints) -> "Node":
         return Node(self.flow, self._hints(ops.Filter(fn), **hints), [self])
 
+    def apply_op(self, op: ops.Operator, **hints) -> "Node":
+        """Attach a prebuilt single-input operator (e.g. a ``ModelOp`` from
+        ``repro.models.registry.model_stage_op``) as the next node."""
+        return Node(self.flow, self._hints(op, **hints), [self])
+
     def groupby(self, column: str) -> "Node":
         return Node(self.flow, ops.GroupBy(column), [self])
 
@@ -88,6 +93,9 @@ class Dataflow:
 
     def lookup(self, key, **kw):
         return self.source.lookup(key, **kw)
+
+    def apply_op(self, op, **hints):
+        return self.source.apply_op(op, **hints)
 
     @property
     def output(self) -> Optional[Node]:

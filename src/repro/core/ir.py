@@ -58,6 +58,10 @@ class PhysicalOp:
     # lowering wires adjacent device-resident ops so batches skip the host
     # round-trip between them
     device_resident: bool = False
+    # Pallas kernels placed into this op's map steps (set by
+    # PlaceKernelsPass): repr strings of the KernelCalls, for explain
+    # output and tests — the executable identity lives in the step fns
+    kernels: Tuple[str, ...] = ()
 
     def replace(self, **kw) -> "PhysicalOp":
         return dataclasses.replace(self, **kw)
@@ -76,6 +80,8 @@ class PhysicalOp:
             flags.append("vmap")
         if self.device_resident:
             flags.append("dev")
+        if self.kernels:
+            flags.append(f"pallas:{','.join(k.split('(')[0] for k in self.kernels)}")
         if self.wait_any:
             flags.append("any")
         if self.replicas:

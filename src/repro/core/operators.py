@@ -138,6 +138,34 @@ class Map(Operator):
 
 
 @dataclasses.dataclass
+class ModelOp(Map):
+    """A registry model stage (``prefill``/``decode_step``/``logits``) as a
+    first-class plan operator (white-box models, per PRETZEL).
+
+    Structurally a ``Map`` — ``fn`` is the stage function with declared
+    ``jax.Array`` annotations, so the op typechecks, fuses, and lowers into
+    ``JittedFuse``/``BatchedJittedFuse`` chains like any other map — plus:
+
+    * identity: ``model_name``/``stage`` name the registry model and stage,
+      so plans and explain output say *which* model runs where;
+    * cost hook: ``cost_hook(batch_size) -> {"mean_s", "p99_s", "cv",
+      "runs", "out_bytes"}`` measures (or estimates) the stage at a batch
+      size — ``profiling.profiler.seed_from_model_ops`` turns these into
+      ``OpLatencyCurve`` buckets so the SLO optimizer plans against real
+      model profiles instead of synthetic curves.
+
+    Built by ``repro.models.registry.model_stage_op``; attach to a flow
+    with ``Node.apply_op``."""
+    model_name: str = ""
+    stage: str = "logits"
+    cost_hook: Optional[Callable] = None
+
+    @property
+    def name(self):
+        return f"model[{self.model_name}:{self.stage}]"
+
+
+@dataclasses.dataclass
 class Filter(Operator):
     fn: Callable
 

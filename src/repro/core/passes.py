@@ -16,6 +16,9 @@ Passes:
   a wait-for-any op.
 * ``FuseLookupsPass``   — locality: fuse lookups into their consumer and
   annotate the result for resolved-ref dynamic dispatch.
+* ``PlaceKernelsPass``  — kernel placement: swap map steps tagged (or
+  pattern-matched) as registered attention/scan computations for their
+  jitted Pallas twins, so lowered chains dispatch custom kernels natively.
 * ``LowerJaxChainsPass`` — lower eligible fused JAX map chains into single
   ``jax.jit`` callables (XLA-level fusion on top of graph-level fusion).
 
@@ -338,6 +341,75 @@ class LowerJaxChainsPass:
 
 
 @dataclasses.dataclass
+class PlaceKernelsPass:
+    """Kernel placement (PRETZEL-style white-box step): swap map steps that
+    compute a registered attention/scan (tagged by ``kernels.ops.kernel_step``
+    or pattern-matched via ``kernels.ops.register_pattern``) for their jitted
+    Pallas twins.
+
+    The twin has the same ``jax.Array`` signature as the reference step, so
+    the rewritten map stays lowerable and slots into the ``compose_steps``
+    body of ``JittedFuse``/``BatchedJittedFuse`` like any other step — a
+    lowered chain already owns its batch on device, so the kernel consumes
+    the ``DeviceTable`` columns with no extra host<->device copies.  Under
+    the chain's ``jax.vmap`` a ``custom_vmap`` rule maps the row axis onto
+    the kernel's native batch dimension: ONE Pallas dispatch per batch.
+
+    Twins are memoized per ``(kernel, params)``, so ``chain_signature`` —
+    and with it the ``ExecutableCache`` key and per-chain routing state —
+    keys on kernel identity + block-size params: recompiles of the same
+    flow share executables/profiles, while chains differing only in tile
+    params stay separate variants.
+
+    Runs BEFORE fusion/lowering so the placed steps flow through them the
+    normal way.  Only ``gpu``-placed ops are rewritten: those are the ones
+    the lowering pass turns into device-resident chains."""
+    name: str = dataclasses.field(default="place-kernels", init=False)
+
+    def run(self, plan: PhysicalPlan, ctx: PassContext) -> PhysicalPlan:
+        from repro.kernels import ops as kops
+
+        new_ops, placed_total = [], 0
+        for o in plan.ops:
+            if o.placement != "gpu":
+                new_ops.append(o)
+                continue
+            subs = _sub_ops(o.op)
+            placed_here: List[str] = []
+            new_subs = []
+            for s in subs:
+                twin = None
+                if isinstance(s, ops.Map) and not isinstance(s, ops.Filter):
+                    twin = kops.placed_twin(s.fn)
+                if twin is None:
+                    new_subs.append(s)
+                    continue
+                rep = copy.copy(s)
+                rep.fn = twin
+                rep.__post_init__()     # re-derive _arg_types/_schema
+                new_subs.append(rep)
+                placed_here.append(repr(kops.match_kernel(s.fn)))
+            if not placed_here:
+                new_ops.append(o)
+                continue
+            if isinstance(o.op, ops.Fuse):
+                new_op = ops.Fuse(new_subs)
+                new_op.resource_class = o.op.resource_class
+                new_op.batching = o.op.batching
+                new_op.high_variance = o.op.high_variance
+                new_op.competitive_replicas = o.op.competitive_replicas
+            else:
+                new_op = new_subs[0]
+            new_ops.append(o.replace(op=new_op,
+                                     kernels=tuple(placed_here)))
+            placed_total += len(placed_here)
+            ctx.note(f"%{o.op_id}: placed {', '.join(placed_here)}")
+        if placed_total:
+            ctx.note(f"placed {placed_total} Pallas kernels")
+        return plan.with_ops(new_ops)
+
+
+@dataclasses.dataclass
 class ApplyPlanConfigPass:
     """Stamp an SLO optimizer ``PlanConfig``'s compile-time per-node
     choices onto the IR: placement overrides and competitive replication
@@ -375,6 +447,7 @@ def build_pipeline(*, fusion: bool = False, competitive_exec: bool = False,
                    batched_lowering: bool = True,
                    default_replicas: int = 3,
                    plan_config=None,
+                   place_kernels: bool = True,
                    validate: bool = True) -> PassPipeline:
     """Map optimization flags (a planner ``Plan`` or user choices) onto a
     pass configuration.  Order mirrors the paper's rewrite order: locality
@@ -392,6 +465,11 @@ def build_pipeline(*, fusion: bool = False, competitive_exec: bool = False,
         passes.append(FuseLookupsPass())
     if plan_config is not None:
         passes.append(ApplyPlanConfigPass(plan_config))
+    if place_kernels:
+        # before replication/fusion: the placed (Pallas-twin) steps flow
+        # through those passes — and into the lowered chain bodies — the
+        # normal way; after apply-config so placement overrides are seen
+        passes.append(PlaceKernelsPass())
     if competitive_exec:
         passes.append(CompetitivePass(default_replicas=default_replicas))
     elif plan_config is not None and plan_config.replica_overrides():

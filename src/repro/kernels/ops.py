@@ -1,58 +1,309 @@
-"""Jitted public wrappers for the Pallas kernels.
+"""Jitted public wrappers for the Pallas kernels + the kernel registry.
 
 On CPU (this container) the kernels run in ``interpret=True`` mode — the
 kernel body executes in Python for correctness validation; on TPU the same
-``pl.pallas_call`` lowers to Mosaic.  ``interpret=None`` auto-detects.
+``pl.pallas_call`` lowers to Mosaic.  ``interpret=None`` auto-detects — the
+detection is resolved ONCE per process (``_default_interpret``) *before*
+the jitted call, so the jit cache key is always a concrete bool (``None``
+vs ``True`` would otherwise compile two identical executables) and the
+backend probe is never paid per dispatch.
+
+The **kernel registry** is what lets the compiler place these kernels into
+lowered chains (``PlaceKernelsPass``):
+
+* ``KERNEL_REGISTRY`` describes each kernel: the jitted Pallas wrapper,
+  its pure-jnp oracle from :mod:`repro.kernels.ref`, and which keyword
+  params are *semantic* (change the math — the oracle takes them too) vs
+  *tile* (block sizes — Pallas-only scheduling knobs).
+* ``kernel_step(name, **params)`` builds a dataflow ``Map`` step function:
+  ``jax.Array``-annotated, computing via the *oracle* (so un-placed plans
+  and ``execute_local`` stay correct), tagged with a :class:`KernelCall`.
+  Steps are memoized per ``(kernel, params)`` so recompiles of the same
+  flow share function identity — ``chain_signature`` keys the executable
+  cache and router state on the function objects.
+* Every step carries its Pallas twin (``__kernel_placed__``): the same
+  signature/annotations but computing via the Pallas wrapper, wrapped in
+  ``jax.custom_batching.custom_vmap`` so that when a lowered chain vmaps
+  the step over a row batch, the batch dim maps onto the kernel's native
+  leading ``B`` dimension — ONE Pallas dispatch per batch, not a generic
+  per-row batching rule.
+* ``register_pattern(fn, kernel, **params)`` pattern-matches an existing
+  user function object to a kernel, for code that cannot be annotated.
+
+Distinct params produce distinct step objects, so two chains differing
+only in block sizes get separate executable-cache entries and separate
+``ChainProfile`` routing state — per-variant, as profiling requires.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 
+from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.wkv6 import wkv6 as _wkv6
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 
 
-def _auto_interpret(interpret: Optional[bool]) -> bool:
-    if interpret is not None:
-        return interpret
+# ---------------------------------------------------------------------------
+# interpret auto-detection: resolved once, outside the jitted call
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=(
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    return _default_interpret() if interpret is None else bool(interpret)
+
+
+_flash_jit = jax.jit(_flash, static_argnames=(
     "causal", "window", "softcap", "scale", "block_q", "block_k",
     "interpret"))
+_decode_jit = jax.jit(_decode, static_argnames=(
+    "window", "softcap", "scale", "block_s", "interpret"))
+_wkv6_jit = jax.jit(_wkv6, static_argnames=("chunk", "interpret"))
+_rglru_jit = jax.jit(_rglru, static_argnames=("chunk", "block_r",
+                                              "interpret"))
+
+
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     softcap: float = 0.0, scale=None, block_q: int = 128,
                     block_k: int = 128, interpret: Optional[bool] = None):
-    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
-                  scale=scale, block_q=block_q, block_k=block_k,
-                  interpret=_auto_interpret(interpret))
+    return _flash_jit(q, k, v, causal=causal, window=window,
+                      softcap=softcap, scale=scale, block_q=block_q,
+                      block_k=block_k,
+                      interpret=_resolve_interpret(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "window", "softcap", "scale", "block_s", "interpret"))
 def decode_attention(q, k_cache, v_cache, k_positions, q_position, *,
                      window: int = 0, softcap: float = 0.0, scale=None,
                      block_s: int = 512, interpret: Optional[bool] = None):
-    return _decode(q, k_cache, v_cache, k_positions, q_position,
-                   window=window, softcap=softcap, scale=scale,
-                   block_s=block_s, interpret=_auto_interpret(interpret))
+    return _decode_jit(q, k_cache, v_cache, k_positions, q_position,
+                       window=window, softcap=softcap, scale=scale,
+                       block_s=block_s,
+                       interpret=_resolve_interpret(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def wkv6(r, k, v, w, u, *, chunk: int = 64,
          interpret: Optional[bool] = None):
-    return _wkv6(r, k, v, w, u, chunk=chunk,
-                 interpret=_auto_interpret(interpret))
+    return _wkv6_jit(r, k, v, w, u, chunk=chunk,
+                     interpret=_resolve_interpret(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "block_r", "interpret"))
 def rglru_scan(a, x, h0=None, *, chunk: int = 128, block_r: int = 512,
                interpret: Optional[bool] = None):
-    return _rglru(a, x, h0, chunk=chunk, block_r=block_r,
-                  interpret=_auto_interpret(interpret))
+    return _rglru_jit(a, x, h0, chunk=chunk, block_r=block_r,
+                      interpret=_resolve_interpret(interpret))
+
+
+# ---------------------------------------------------------------------------
+# kernel registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelCall:
+    """Identity of one kernel placement: kernel name + sorted params.
+    Hashable, so it keys the step/placement memo tables — which is what
+    makes step function objects (and therefore ``chain_signature`` cache
+    keys) stable across recompiles of the same flow."""
+    kernel: str
+    params: Tuple[Tuple[str, Any], ...] = ()
+
+    def kwargs(self) -> Dict[str, Any]:
+        return dict(self.params)
+
+    def __repr__(self):
+        ps = ", ".join(f"{k}={v}" for k, v in self.params)
+        return f"{self.kernel}({ps})"
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One placeable kernel: the Pallas entry point, its jnp oracle, the
+    step's column names, and the param split (semantic params reach the
+    oracle too; tile params are Pallas-only block sizes)."""
+    name: str
+    fn: Callable                 # jitted Pallas wrapper, leading batch dim
+    ref: Callable                # pure-jnp oracle, leading batch dim
+    args: Tuple[str, ...]        # step argument (column) order
+    sem_params: Tuple[str, ...] = ()
+    tile_params: Tuple[str, ...] = ()
+
+    def split(self, params: Dict[str, Any]):
+        unknown = set(params) - set(self.sem_params) - set(self.tile_params)
+        if unknown:
+            raise ValueError(f"{self.name}: unknown params {sorted(unknown)}")
+        sem = {k: v for k, v in params.items() if k in self.sem_params}
+        return sem, dict(params)
+
+
+KERNEL_REGISTRY: Dict[str, KernelSpec] = {
+    "flash_attention": KernelSpec(
+        name="flash_attention", fn=flash_attention, ref=ref.attention_ref,
+        args=("q", "k", "v"),
+        sem_params=("causal", "window", "softcap", "scale"),
+        tile_params=("block_q", "block_k")),
+    "decode_attention": KernelSpec(
+        name="decode_attention", fn=decode_attention,
+        ref=ref.decode_attention_ref,
+        args=("q", "k_cache", "v_cache", "k_positions", "q_position"),
+        sem_params=("window", "softcap", "scale"),
+        tile_params=("block_s",)),
+    "wkv6": KernelSpec(
+        name="wkv6", fn=wkv6, ref=ref.wkv6_ref,
+        args=("r", "k", "v", "w", "u"),
+        tile_params=("chunk",)),
+    "rglru_scan": KernelSpec(
+        name="rglru_scan", fn=rglru_scan, ref=ref.rglru_scan_ref,
+        args=("a", "x"),
+        tile_params=("chunk", "block_r")),
+}
+
+#: user fn object -> KernelCall, for code that can't carry the step tag
+KERNEL_PATTERNS: Dict[Callable, KernelCall] = {}
+
+
+def register_pattern(fn: Callable, kernel: str, **params) -> Callable:
+    """Pattern-match ``fn`` (an existing map function computing what
+    ``kernel`` computes) to the kernel, so ``PlaceKernelsPass`` swaps it.
+    Returns ``fn`` for decorator use."""
+    call = _call(kernel, params)
+    KERNEL_PATTERNS[fn] = call
+    return fn
+
+
+def _call(kernel: str, params: Dict[str, Any]) -> KernelCall:
+    if kernel not in KERNEL_REGISTRY:
+        raise ValueError(f"unknown kernel {kernel!r}; have "
+                         f"{sorted(KERNEL_REGISTRY)}")
+    KERNEL_REGISTRY[kernel].split(params)   # validate names
+    return KernelCall(kernel, tuple(sorted(params.items())))
+
+
+def match_kernel(fn) -> Optional[KernelCall]:
+    """The ``PlaceKernelsPass`` probe: the step tag, else the pattern
+    table."""
+    call = getattr(fn, "__kernel__", None)
+    if call is not None:
+        return call
+    return KERNEL_PATTERNS.get(fn)
+
+
+# -- step construction -------------------------------------------------------
+
+def _named_fn(fname: str, argnames: Tuple[str, ...],
+              inner: Callable) -> Callable:
+    """A function with explicit positional args (``fn_signature`` reads
+    ``__code__``) and jax.Array annotations, delegating to ``inner``."""
+    src = (f"def {fname}({', '.join(argnames)}):\n"
+           f"    return _inner({', '.join(argnames)})")
+    ns: Dict[str, Any] = {"_inner": inner}
+    exec(src, ns)                                       # noqa: S102
+    f = ns[fname]
+    f.__annotations__ = {a: jax.Array for a in argnames}
+    f.__annotations__["return"] = jax.Array
+    return f
+
+
+def _broadcast_unbatched(axis_size, cols, in_batched):
+    return [c if b else jnp.broadcast_to(c[None], (axis_size,) + c.shape)
+            for c, b in zip(cols, in_batched)]
+
+
+def _make_placed(spec: KernelSpec, call: KernelCall,
+                 bound: Tuple[Tuple[str, Any], ...]) -> Callable:
+    """The Pallas twin of a step: per-row it adds the batch dim and calls
+    the kernel with ``B=1``; under ``jax.vmap`` (the batched-lowered
+    chain) a ``custom_vmap`` rule maps the row axis straight onto the
+    kernel's native batch dimension — one dispatch for the whole batch."""
+    _, kw = spec.split(call.kwargs())
+    bound_vals = [v for _, v in bound]
+
+    def batched(*cols):
+        return spec.fn(*cols, *bound_vals, **kw)
+
+    @jax.custom_batching.custom_vmap
+    def per_row(*cols):
+        return batched(*[c[None] for c in cols])[0]
+
+    @per_row.def_vmap
+    def _rule(axis_size, in_batched, *cols):        # noqa: ANN001
+        cols = _broadcast_unbatched(axis_size, cols, in_batched)
+        return batched(*cols), True
+
+    fn = _named_fn(f"pallas_{spec.name}", spec.args, per_row)
+    fn.__kernel__ = call
+    fn.__kernel_params__ = call.kwargs()
+    return fn
+
+
+def _make_step(spec: KernelSpec, call: KernelCall,
+               bound: Tuple[Tuple[str, Any], ...]) -> Callable:
+    sem, _ = spec.split(call.kwargs())
+    bound_vals = [v for _, v in bound]
+
+    def via_ref(*cols):
+        out = spec.ref(*[c[None] for c in cols], *bound_vals, **sem)
+        return out[0]
+
+    fn = _named_fn(spec.name, spec.args, via_ref)
+    fn.__kernel__ = call
+    fn.__kernel_placed__ = _make_placed(spec, call, bound)
+    return fn
+
+
+#: (KernelCall, bound ids) -> step fn — function-object stability across
+#: recompiles is what keeps executable-cache keys and router state shared
+_STEPS: Dict[Tuple[KernelCall, Tuple[Tuple[str, int], ...]], Callable] = {}
+_PLACED: Dict[KernelCall, Callable] = {}
+
+
+def kernel_step(kernel: str, *, bound: Optional[Dict[str, Any]] = None,
+                **params) -> Callable:
+    """A dataflow map step for ``kernel``: jax.Array-annotated, oracle
+    semantics, tagged for placement.  ``bound`` holds trailing kernel
+    arguments closed over as constants rather than consumed as columns
+    (e.g. ``wkv6``'s shared ``u`` bonus matrix, which is per-model, not
+    per-row).  Memoized per ``(kernel, params, bound identities)``."""
+    call = _call(kernel, params)
+    bound_t = tuple(sorted((bound or {}).items()))
+    key = (call, tuple((k, id(v)) for k, v in bound_t))
+    fn = _STEPS.get(key)
+    if fn is None:
+        spec = KERNEL_REGISTRY[kernel]
+        n_bound = len(bound_t)
+        if n_bound:
+            spec = dataclasses.replace(spec,
+                                       args=spec.args[:len(spec.args)
+                                                      - n_bound])
+        fn = _STEPS[key] = _make_step(spec, call, bound_t)
+    return fn
+
+
+def placed_fn(call: KernelCall) -> Callable:
+    """The memoized Pallas twin for a *pattern-matched* call (steps built
+    by ``kernel_step`` already carry theirs on ``__kernel_placed__``)."""
+    fn = _PLACED.get(call)
+    if fn is None:
+        fn = _PLACED[call] = _make_placed(KERNEL_REGISTRY[call.kernel],
+                                          call, ())
+    return fn
+
+
+def placed_twin(fn: Callable) -> Optional[Callable]:
+    """Resolve the Pallas replacement for a map function, if any: the
+    step's own twin, else the registry twin of its matched call."""
+    twin = getattr(fn, "__kernel_placed__", None)
+    if twin is not None:
+        return twin
+    call = match_kernel(fn)
+    if call is not None:
+        return placed_fn(call)
+    return None

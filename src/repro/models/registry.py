@@ -158,3 +158,199 @@ def build_model(cfg: ModelConfig, ax: Optional[AxisInfo] = None, *,
         raise ValueError(f"unknown family {cfg.family}")
     return Model(cfg=cfg, ax=ax, long_context=long_context,
                  moe_dispatch=moe_dispatch)
+
+
+# ---------------------------------------------------------------------------
+# plan-operator glue: model stages as first-class dataflow ops (ModelOp)
+# ---------------------------------------------------------------------------
+#
+# ``model_stage_op(model, params, stage)`` wraps one serving stage of a
+# built model as a ``repro.core.operators.ModelOp`` — a map step with
+# declared ``jax.Array`` annotations (so it typechecks, fuses, and lowers
+# into Jitted/BatchedJittedFuse chains) and *native batch semantics*: the
+# step is row-wise for the dataflow, but a ``custom_vmap`` rule maps the
+# lowered chain's row axis straight onto the model's leading batch
+# dimension, so a whole batch runs through the model in ONE dispatch.
+#
+# Row-wise column contracts (per table row):
+#
+# * ``logits``  — tokens [S] i32              -> next-token logits [V]
+# * ``prefill`` — tokens [S] i32              -> (tok [] i32, pos [] i32,
+#                                                 *cache leaves)
+# * ``decode``  — (tok, pos, *cache leaves)   -> same shape: one greedy
+#                                                 decode step advances them
+#
+# The KV cache rides the table as per-row columns (one per pytree leaf),
+# so prefill -> decode -> decode chains fuse into a single device-resident
+# chain with no host round-trip between steps.
+
+def _stage_fn(fname: str, argnames, inner, ret_arity: int):
+    """Explicit-positional-arg wrapper (``fn_signature`` reads
+    ``__code__``) with jax.Array annotations, delegating to ``inner``."""
+    fname = "".join(c if c.isalnum() or c == "_" else "_" for c in fname)
+    if not fname or fname[0].isdigit():
+        fname = f"m_{fname}"
+    src = (f"def {fname}({', '.join(argnames)}):\n"
+           f"    return _inner({', '.join(argnames)})")
+    ns: Dict[str, Any] = {"_inner": inner}
+    exec(src, ns)                                        # noqa: S102
+    f = ns[fname]
+    ann: Dict[str, Any] = {a: jax.Array for a in argnames}
+    if ret_arity == 1:
+        ann["return"] = jax.Array
+    else:
+        from typing import Tuple
+        ann["return"] = Tuple[tuple([jax.Array] * ret_arity)]
+    f.__annotations__ = ann
+    return f
+
+
+def _rowwise_native_batch(batched, multi: bool):
+    """Row-wise view of a natively-batched stage fn: untransformed calls
+    run the stage with B=1; under ``jax.vmap`` (a batched-lowered chain)
+    the rule feeds the whole row batch to the stage in one call."""
+
+    @jax.custom_batching.custom_vmap
+    def per_row(*cols):
+        out = batched(*[c[None] for c in cols])
+        return tuple(o[0] for o in out) if multi else out[0]
+
+    @per_row.def_vmap
+    def _rule(axis_size, in_batched, *cols):
+        cols = [c if b
+                else jnp.broadcast_to(c[None], (axis_size,) + c.shape)
+                for c, b in zip(cols, in_batched)]
+        out = batched(*cols)
+        return (out, tuple(True for _ in out)) if multi else (out, True)
+
+    return per_row
+
+
+def _timing_hook(batched, arg_maker, *, runs: int = 3, warmup: int = 1):
+    """Per-bucket cost hook: measure the jitted natively-batched stage at
+    batch size ``b``.  Feeds ``profiling.profiler.seed_from_model_ops`` ->
+    ``OpLatencyCurve`` buckets."""
+    import statistics
+    import time
+
+    jitted = jax.jit(batched)
+
+    def hook(b: int) -> Dict[str, Any]:
+        args = arg_maker(b)
+        out = None
+        for _ in range(warmup):
+            out = jax.block_until_ready(jitted(*args))
+        ts = []
+        for _ in range(runs):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(jitted(*args))
+            ts.append(time.perf_counter() - t0)
+        mean = sum(ts) / len(ts)
+        cv = (statistics.stdev(ts) / mean) if len(ts) > 1 and mean > 0 \
+            else 0.0
+        leaves = jax.tree_util.tree_leaves(out)
+        ob = int(sum(x.size * x.dtype.itemsize for x in leaves))
+        return {"mean_s": mean, "p99_s": max(ts), "cv": cv,
+                "runs": len(ts), "out_bytes": ob}
+
+    return hook
+
+
+def model_stage_op(model: Model, params, stage: str, *,
+                   model_name: str = "model", seq_len: int = 32,
+                   cache_len: int = 64, measure: bool = True,
+                   runs: int = 3):
+    """Build a ``ModelOp`` for one serving stage of ``model`` (see module
+    comment for the row-wise column contracts).  ``seq_len``/``cache_len``
+    fix the token/cache geometry (the cost hook measures at exactly these
+    shapes; the op itself serves any row shape the flow feeds it).
+    ``measure=False`` skips attaching the timing cost hook."""
+    from repro.core import operators as ops
+
+    i32 = jnp.int32
+    cache_shape = jax.eval_shape(lambda: model.init_cache(1, cache_len))
+    leaves_shape, treedef = jax.tree_util.tree_flatten(cache_shape)
+    n_leaves = len(leaves_shape)
+    state_names = ["tok", "pos"] + [f"c{i}" for i in range(n_leaves)]
+
+    # Cache leaves are NOT batch-leading in general (a lax.scan over layers
+    # stacks the layer axis first), so find each leaf's batch axis by
+    # diffing shapes at B=1 vs B=2 and normalize: as table columns, cache
+    # leaves are always batch-leading; ``_join``/``_split`` transpose at
+    # the model boundary.
+    leaves_b2, _ = jax.tree_util.tree_flatten(
+        jax.eval_shape(lambda: model.init_cache(2, cache_len)))
+    batch_axes = []
+    for a, b in zip(leaves_shape, leaves_b2):
+        diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                if x != y]
+        if len(diff) != 1:
+            raise ValueError(
+                f"cannot identify batch axis of cache leaf {a.shape} "
+                f"vs {b.shape}")
+        batch_axes.append(diff[0])
+
+    def _split(cache):
+        """native cache -> batch-leading leaf columns"""
+        return [jnp.moveaxis(l, ax, 0) for l, ax in
+                zip(jax.tree_util.tree_leaves(cache), batch_axes)]
+
+    def _join(leaves):
+        """batch-leading leaf columns -> native cache"""
+        return jax.tree_util.tree_unflatten(
+            treedef, [jnp.moveaxis(l, 0, ax)
+                      for l, ax in zip(leaves, batch_axes)])
+
+    if stage == "logits":
+        def batched(tokens):
+            out, _ = model.logits(params, {"tokens": tokens}, remat=False)
+            return out[:, -1]
+
+        fn = _stage_fn(f"{model_name}_logits", ("tokens",),
+                       _rowwise_native_batch(batched, multi=False), 1)
+        names = ["logits"]
+
+        def arg_maker(b):
+            return (jnp.zeros((b, seq_len), i32),)
+
+    elif stage == "prefill":
+        def batched(tokens):
+            logits, cache = model.prefill(params, {"tokens": tokens},
+                                          cache_len)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(i32)
+            pos = jnp.full(tokens.shape[:1], tokens.shape[1], i32)
+            return (tok, pos, *_split(cache))
+
+        fn = _stage_fn(f"{model_name}_prefill", ("tokens",),
+                       _rowwise_native_batch(batched, multi=True),
+                       2 + n_leaves)
+        names = list(state_names)
+
+        def arg_maker(b):
+            return (jnp.zeros((b, seq_len), i32),)
+
+    elif stage == "decode":
+        def batched(tok, pos, *leaves):
+            cache = _join(leaves)
+            logits, new_cache = model.decode_step(params, tok[:, None],
+                                                  pos, cache)
+            ntok = jnp.argmax(logits[:, -1], axis=-1).astype(i32)
+            return (ntok, pos + 1, *_split(new_cache))
+
+        fn = _stage_fn(f"{model_name}_decode", tuple(state_names),
+                       _rowwise_native_batch(batched, multi=True),
+                       2 + n_leaves)
+        names = list(state_names)
+
+        def arg_maker(b):
+            cache = model.init_cache(b, cache_len)
+            return (jnp.zeros((b,), i32), jnp.zeros((b,), i32),
+                    *_split(cache))
+
+    else:
+        raise ValueError(f"unknown stage {stage!r} "
+                         "(logits | prefill | decode)")
+
+    hook = _timing_hook(batched, arg_maker, runs=runs) if measure else None
+    return ops.ModelOp(fn=fn, names=names, model_name=model_name,
+                       stage=stage, cost_hook=hook)

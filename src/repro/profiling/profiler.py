@@ -385,6 +385,44 @@ def profile_flow_curves(flow, sample: Table, *,
     return fp
 
 
+def seed_from_model_ops(plan: PhysicalPlan, *,
+                        batch_sizes: Tuple[int, ...] = DEFAULT_SWEEP
+                        ) -> FlowProfile:
+    """Build a ``FlowProfile`` from the plan's ``ModelOp`` cost hooks:
+    each hook measures its model stage natively batched at every swept
+    size, and an op's curve is the sum of its (possibly fused) model-stage
+    hooks per bucket.  This is how real model profiles enter the
+    measure->model->plan loop without a full graph sweep — curves for the
+    plan's non-model ops are left to ``profile_plan``/``refresh_from_plan``
+    (``SLOController.refresh_profile`` merges live chain measurements into
+    whatever this seeds)."""
+    curves: Dict[int, OpLatencyCurve] = {}
+    for o in plan.ops:
+        subs = list(getattr(o.op, "ops", None) or [o.op])
+        hooked = [s for s in subs
+                  if isinstance(s, ops.ModelOp) and s.cost_hook is not None]
+        if not hooked:
+            continue
+        curve = OpLatencyCurve(key=o.op_id, name=o.op.name)
+        for b in batch_sizes:
+            mean = p99 = cv = 0.0
+            runs, out_bytes = 0, 0
+            for s in hooked:
+                d = s.cost_hook(b)
+                mean += float(d["mean_s"])
+                p99 += float(d["p99_s"])
+                cv = max(cv, float(d["cv"]))
+                runs = int(d["runs"]) if not runs \
+                    else min(runs, int(d["runs"]))
+                out_bytes = int(d["out_bytes"])   # last stage's payload
+            curve.buckets[b] = BucketStats(mean_s=mean, p99_s=p99, cv=cv,
+                                           runs=runs, out_bytes=out_bytes)
+        curves[o.op_id] = curve
+    return FlowProfile(curves=curves,
+                       meta={"kind": "model-op-seed",
+                             "batch_sizes": list(batch_sizes)})
+
+
 def refresh_from_plan(profile: FlowProfile, plan: PhysicalPlan) -> bool:
     """Fold every live ``ChainProfile`` the plan's lowered ops have
     accumulated into the offline curves (the controller's measure step).

@@ -101,6 +101,27 @@ def _walk_sizes(runtime, deployed, extra_rows=()) -> List[int]:
     return sorted(sizes or {1})
 
 
+def _observed_buckets(runtime, dag, coverage) -> List[int]:
+    """Buckets live traffic actually landed on, most-frequent first: the
+    row-count histogram read from the runtime's ``batch/<dag>/.../size``
+    metric series (prefix-matched — node names change across lowering
+    flips, and a green DAG shares its blue predecessor's name, so blue's
+    traffic shape steers green's warm order).  Each observed batch size
+    maps to the padding bucket that would serve it."""
+    from repro.core.lowering import bucket_rows
+    prefix = f"batch/{dag.name}/"
+    hist: Dict[int, int] = {}
+    snapshot = getattr(runtime, "metrics_snapshot", lambda: {})()
+    for key, series in snapshot.items():
+        if not (key.startswith(prefix) and key.endswith("/size")):
+            continue
+        for v in series:
+            b = bucket_rows(max(1, int(v)), coverage)
+            hist[b] = hist.get(b, 0) + 1
+    return [b for b, _ in sorted(hist.items(),
+                                 key=lambda kv: (-kv[1], kv[0]))]
+
+
 def warm_deployment(runtime, deployed, sample: Table,
                     buckets: Optional[List[int]] = None,
                     extra_rows=()) -> Dict[str, Any]:
@@ -124,6 +145,13 @@ def warm_deployment(runtime, deployed, sample: Table,
     plan = deployed.plan
     if buckets is None:
         buckets = _walk_sizes(runtime, deployed, extra_rows)
+    # warm the buckets live traffic is actually hitting FIRST — if the
+    # swap races the warm walk (or the walk aborts), the executables most
+    # likely to be requested next are already traced; the remainder of
+    # the coverage set follows so nothing is left cold
+    observed = _observed_buckets(runtime, dag, buckets)
+    buckets = ([b for b in observed if b in set(buckets)]
+               + [b for b in buckets if b not in set(observed)])
     ctx = ProfileCtx(getattr(runtime, "kvs", None))
     before = EXECUTABLE_CACHE.traces()
     stats_before = EXECUTABLE_CACHE.stats()
@@ -152,6 +180,7 @@ def warm_deployment(runtime, deployed, sample: Table,
     stats_after = EXECUTABLE_CACHE.stats()
     return {
         "buckets": list(buckets),
+        "observed": observed,
         "traces_before": before,
         "traces_after": after,
         "fresh_traces": after - before,

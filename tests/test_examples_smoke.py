@@ -1,0 +1,39 @@
+"""The example pipelines must run headlessly, end to end, through the
+compiled serving path (``compile_flow``) — not a toy interpreted route.
+Each example's ``run()`` returns the metrics dict asserted here.
+"""
+import importlib.util
+import pathlib
+
+import pytest
+
+EXAMPLES = pathlib.Path(__file__).resolve().parents[1] / "examples"
+
+
+def _load(name: str):
+    spec = importlib.util.spec_from_file_location(
+        f"_smoke_{name}", EXAMPLES / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_video_pipeline_smoke():
+    r = _load("video_pipeline").run(frames=2)
+    assert r["frames"] == 2
+    assert r["labels_per_frame"] > 0
+    assert r["controller"] in ("apply", "steady"), r
+    assert r["median_ms"] < 60_000
+
+
+def test_image_cascade_smoke():
+    r = _load("image_cascade").run(images=3)
+    assert r["images"] == 3
+    assert len(r["labels"]) == 3 and all(r["labels"])
+    assert 0 <= r["escalated"] <= 3
+
+
+def test_decode_cascade_smoke():
+    r = _load("decode_cascade").run(prompts=2, steps=2)
+    assert r["tokens_match"], "fused cascade diverged from model loop"
+    assert r["steady_ms"] < 60_000

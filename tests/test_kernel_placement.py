@@ -1,0 +1,293 @@
+"""PlaceKernelsPass + kernel registry: identity, placement, parity.
+
+Every Pallas kernel is routed through a fused lowered chain (interpret
+mode on CPU) and must match the same chain compiled with
+``place_kernels=False`` — whose step IS the :mod:`repro.kernels.ref`
+oracle — at every padding bucket the serving path pads to, and under the
+masked filter-in-jit variant.
+"""
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dataflow import Dataflow
+from repro.core.lowering import EXECUTABLE_CACHE, forced_batched_routing
+from repro.core.table import Table
+from repro.kernels import ops as kops
+from repro.runtime import NetModel, Runtime
+
+H, KV, S, HD = 2, 2, 32, 8       # attention shapes (per row)
+T, R = 8, 8                      # recurrence shapes (per row)
+DSEQ = 16                        # decode cache length
+
+
+@pytest.fixture(scope="module")
+def rt():
+    r = Runtime(n_cpu=2, n_gpu=1, net=NetModel(scale=0.0))
+    yield r
+    r.stop()
+
+
+def _rand(key, shape, scale=0.3):
+    return jax.random.normal(jax.random.PRNGKey(key), shape,
+                             jnp.float32) * scale
+
+
+# -- one (flow builder, table builder) pair per kernel -----------------------
+
+def _gate3(q: "jax.Array", k: "jax.Array", v: "jax.Array"
+           ) -> "Tuple[jax.Array, jax.Array, jax.Array]":
+    return q * 0.5, k, v
+
+
+def _flow_flash():
+    step = kops.kernel_step("flash_attention", causal=True,
+                            block_q=16, block_k=16)
+    fl = Dataflow([("q", jax.Array), ("k", jax.Array), ("v", jax.Array)])
+    fl.output = fl.map(_gate3, names=["q", "k", "v"], gpu=True) \
+        .map(step, names=["o"], gpu=True)
+    return fl
+
+
+def _tab_flash(n):
+    q, k, v = (_rand(i, (n, H, S, HD)) for i in range(3))
+    return Table([("q", jax.Array), ("k", jax.Array), ("v", jax.Array)],
+                 [(q[i], k[i], v[i]) for i in range(n)])
+
+
+def _gate_dec(q: "jax.Array", kc: "jax.Array", vc: "jax.Array",
+              kpos: "jax.Array", qpos: "jax.Array"
+              ) -> "Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]":
+    return q * 0.5, kc, vc, kpos, qpos
+
+
+def _flow_decode():
+    step = kops.kernel_step("decode_attention", block_s=16)
+    cols = ["q", "kc", "vc", "kpos", "qpos"]
+    fl = Dataflow([(c, jax.Array) for c in cols])
+    fl.output = fl.map(_gate_dec, names=cols, gpu=True) \
+        .map(step, names=["o"], gpu=True)
+    return fl
+
+
+def _tab_decode(n):
+    q = _rand(0, (n, H, HD))
+    kc, vc = _rand(1, (n, KV, DSEQ, HD)), _rand(2, (n, KV, DSEQ, HD))
+    kpos = jnp.broadcast_to(jnp.arange(DSEQ, dtype=jnp.int32),
+                            (n, DSEQ))
+    qpos = jnp.full((n,), DSEQ // 2, jnp.int32)
+    cols = ["q", "kc", "vc", "kpos", "qpos"]
+    return Table([(c, jax.Array) for c in cols],
+                 [(q[i], kc[i], vc[i], kpos[i], qpos[i])
+                  for i in range(n)])
+
+
+def _gate4(r: "jax.Array", k: "jax.Array", v: "jax.Array", w: "jax.Array"
+           ) -> "Tuple[jax.Array, jax.Array, jax.Array, jax.Array]":
+    return r * 0.5, k, v, w
+
+
+_WKV_U = None          # module-level: bound-arg identity must be stable
+
+
+def _wkv_u():
+    global _WKV_U
+    if _WKV_U is None:
+        _WKV_U = _rand(9, (H, HD))
+    return _WKV_U
+
+
+def _flow_wkv6():
+    step = kops.kernel_step("wkv6", bound={"u": _wkv_u()}, chunk=4)
+    cols = ["r", "k", "v", "w"]
+    fl = Dataflow([(c, jax.Array) for c in cols])
+    fl.output = fl.map(_gate4, names=cols, gpu=True) \
+        .map(step, names=["o"], gpu=True)
+    return fl
+
+
+def _tab_wkv6(n):
+    r, k, v, w = (_rand(i, (n, T, H, HD)) for i in range(4))
+    cols = ["r", "k", "v", "w"]
+    return Table([(c, jax.Array) for c in cols],
+                 [(r[i], k[i], v[i], w[i]) for i in range(n)])
+
+
+def _gate2(a: "jax.Array", x: "jax.Array"
+           ) -> "Tuple[jax.Array, jax.Array]":
+    return a, x * 0.5
+
+
+def _flow_rglru():
+    step = kops.kernel_step("rglru_scan", chunk=4, block_r=R)
+    fl = Dataflow([("a", jax.Array), ("x", jax.Array)])
+    fl.output = fl.map(_gate2, names=["a", "x"], gpu=True) \
+        .map(step, names=["o"], gpu=True)
+    return fl
+
+
+def _tab_rglru(n):
+    a = jax.nn.sigmoid(_rand(0, (n, T, R), 1.0))
+    x = _rand(1, (n, T, R))
+    return Table([("a", jax.Array), ("x", jax.Array)],
+                 [(a[i], x[i]) for i in range(n)])
+
+
+_CASES = {"flash": (_flow_flash, _tab_flash),
+          "decode": (_flow_decode, _tab_decode),
+          "wkv6": (_flow_wkv6, _tab_wkv6),
+          "rglru": (_flow_rglru, _tab_rglru)}
+
+
+def _assert_close(got, want, atol=1e-4):
+    assert len(got.rows) == len(want.rows)
+    for g, w in zip(got.rows, want.rows):
+        for gv, wv in zip(g.values, w.values):
+            np.testing.assert_allclose(
+                np.asarray(gv, np.float32), np.asarray(wv, np.float32),
+                atol=atol, rtol=1e-3)
+
+
+# -- parity through lowered chains, at every padding bucket ------------------
+
+@pytest.mark.parametrize("which", sorted(_CASES))
+def test_lowered_chain_matches_oracle_at_buckets(rt, which):
+    """Row counts 1, 2, 3 land on padding buckets 1, 2 and 4 (row 3 pads
+    up), all batch-routed: the placed Pallas chain must reproduce the
+    oracle chain at each."""
+    build, mktab = _CASES[which]
+    dep_k = build().deploy(rt, fusion=True, name=f"kp_{which}")
+    dep_r = build().deploy(rt, fusion=True, place_kernels=False,
+                           name=f"kp_{which}_ref")
+    assert any(o.kernels for o in dep_k.plan.ops), "nothing placed"
+    assert not any(o.kernels for o in dep_r.plan.ops)
+    routed = [o.op for o in dep_k.plan.ops] \
+        + [o.op for o in dep_r.plan.ops]
+    for n in (1, 2, 3):
+        tab = mktab(n)
+        with forced_batched_routing(routed):
+            got = dep_k.execute(tab).result(120)
+            want = dep_r.execute(tab).result(120)
+        _assert_close(got, want)
+
+
+def _q_mean_pos(q: "jax.Array", k: "jax.Array", v: "jax.Array") -> bool:
+    return jnp.mean(q) > 0
+
+
+def test_masked_filter_in_jit_variant_matches(rt):
+    """A gpu filter fused upstream of the kernel step lowers to the
+    masked (filter-in-jit) executable; parity must hold there too, with
+    only surviving rows emitted."""
+    def build():
+        step = kops.kernel_step("flash_attention", causal=True,
+                                block_q=16, block_k=16)
+        cols = [("q", jax.Array), ("k", jax.Array), ("v", jax.Array)]
+        fl = Dataflow(cols)
+        fl.output = fl.map(_gate3, names=["q", "k", "v"], gpu=True) \
+            .filter(_q_mean_pos, gpu=True) \
+            .map(step, names=["o"], gpu=True)
+        return fl
+
+    dep_k = build().deploy(rt, fusion=True, name="kp_masked")
+    dep_r = build().deploy(rt, fusion=True, place_kernels=False,
+                           name="kp_masked_ref")
+    tab = _tab_flash(4)
+    routed = [o.op for o in dep_k.plan.ops] \
+        + [o.op for o in dep_r.plan.ops]
+    with forced_batched_routing(routed):
+        got = dep_k.execute(tab).result(120)
+        want = dep_r.execute(tab).result(120)
+    assert 0 < len(got.rows) < 4, "filter should split the 4 rows"
+    _assert_close(got, want)
+
+
+# -- registry identity & annotations -----------------------------------------
+
+def test_kernel_step_memoized_per_params():
+    s1 = kops.kernel_step("flash_attention", causal=True,
+                          block_q=16, block_k=16)
+    s2 = kops.kernel_step("flash_attention", block_k=16,
+                          block_q=16, causal=True)       # order-free
+    s3 = kops.kernel_step("flash_attention", causal=True,
+                          block_q=32, block_k=16)
+    assert s1 is s2
+    assert s3 is not s1, "tile params must key distinct steps"
+    assert s1.__kernel_placed__ is s2.__kernel_placed__
+    assert s3.__kernel_placed__ is not s1.__kernel_placed__
+    assert s1.__kernel__ != s3.__kernel__
+
+
+def test_kernel_step_bound_identity():
+    u1, u2 = _wkv_u(), _rand(10, (H, HD))
+    a = kops.kernel_step("wkv6", bound={"u": u1}, chunk=4)
+    b = kops.kernel_step("wkv6", bound={"u": u1}, chunk=4)
+    c = kops.kernel_step("wkv6", bound={"u": u2}, chunk=4)
+    assert a is b
+    assert c is not a, "different bound array -> different step"
+
+
+def test_kernel_step_rejects_unknown():
+    with pytest.raises(ValueError):
+        kops.kernel_step("flash_attention", bogus=1)
+    with pytest.raises(ValueError):
+        kops.kernel_step("no_such_kernel")
+
+
+def _user_attn(q: "jax.Array", k: "jax.Array",
+               v: "jax.Array") -> "jax.Array":
+    return q      # stand-in body; the pattern tag is what matters
+
+
+def test_register_pattern_resolves_twin():
+    try:
+        kops.register_pattern(_user_attn, "flash_attention",
+                              causal=True, block_q=16, block_k=16)
+        call = kops.match_kernel(_user_attn)
+        assert call is not None and call.kernel == "flash_attention"
+        assert kops.placed_twin(_user_attn) is kops.placed_fn(call)
+    finally:
+        kops.KERNEL_PATTERNS.pop(_user_attn, None)
+
+
+def test_plan_repr_shows_placement(rt):
+    dep = _flow_flash().deploy(rt, fusion=True, name="kp_repr")
+    assert any("pallas:flash_attention" in repr(o)
+               for o in dep.plan.ops)
+
+
+def test_reregister_is_trace_free(rt):
+    """Recompiling + re-registering the same flow shares step identity
+    (memoized kernel steps), so chain signatures — and the executables
+    behind them — are reused: zero fresh traces."""
+    dep1 = _flow_flash().deploy(rt, fusion=True, name="kp_rr1")
+    tab = _tab_flash(2)
+    dep1.execute(tab).result(120)
+    before = EXECUTABLE_CACHE.traces()
+    dep2 = _flow_flash().deploy(rt, fusion=True, name="kp_rr2")
+    dep2.execute(tab).result(120)
+    assert EXECUTABLE_CACHE.traces() == before
+
+
+# -- the interpret-resolution bugfix -----------------------------------------
+
+def test_interpret_resolved_once_outside_jit():
+    """``interpret=None`` must be resolved to a concrete bool ONCE per
+    process (cached backend probe), never inside the jitted call — the
+    jit cache key then never sees None."""
+    kops._default_interpret.cache_clear()
+    q, k, v = (_rand(i, (1, H, S, HD)) for i in range(3))
+    kops.flash_attention(q, k, v, block_q=16, block_k=16)
+    info = kops._default_interpret.cache_info()
+    assert info.currsize == 1 and info.misses == 1
+    kops.flash_attention(q, k, v, block_q=16, block_k=16)
+    kops.wkv6(*(_rand(i, (1, T, H, HD)) for i in range(4)),
+              _wkv_u(), chunk=4)
+    info = kops._default_interpret.cache_info()
+    assert info.misses == 1, "backend re-probed after first resolve"
+    # explicit interpret bypasses the probe entirely
+    assert kops._resolve_interpret(True) is True
+    assert kops._resolve_interpret(False) is False
