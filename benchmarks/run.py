@@ -24,8 +24,14 @@ for the video pipeline and the prefill->decode cascade, greedy-token
 parity for the fused cascade, Pallas-kernel-vs-reference step latency
 and chain parity, single-dispatch-per-batch and zero-retrace checks for
 placed kernel chains, and the SLO controller's propose->hot-apply
-outcome against ModelOp-measured curves) so CI can track the perf
-trajectory across PRs.
+outcome against ModelOp-measured curves; ``overload`` ->
+``BENCH_overload.json``: an offered-load sweep from 0.5x to 3x capacity
+through the admission gate — per-class goodput/p50/p99,
+shed/degrade/expiry counts, shed fast-fail p99, expiry-overrun p99, and
+per-point drain + counter-reconciliation integrity bits; at 3x the CI
+gate asserts interactive p99 within SLO, sheds failing in <10% of the
+SLO budget, zero wedged batchers and zero hot-path re-traces) so CI can
+track the perf trajectory across PRs.
 """
 from __future__ import annotations
 
@@ -34,7 +40,7 @@ import sys
 import time
 
 SUITES = ("fusion", "jit_fusion", "competitive", "autoscaling", "locality",
-          "batching", "slo_planner", "replan", "model_serving",
+          "batching", "slo_planner", "replan", "overload", "model_serving",
           "pipelines", "roofline")
 
 
@@ -90,6 +96,13 @@ def main() -> None:
             duration_s=5.0 if args.fast else 10.0,
             rate_hz=80.0 if args.fast else 120.0,
             json_path="BENCH_replan.json" if args.json else None))
+    if "overload" in only:
+        from benchmarks import overload
+        emit(overload.run(
+            duration_s=1.5 if args.fast else 2.5,
+            multipliers=(0.5, 3.0) if args.fast
+            else (0.5, 1.0, 2.0, 3.0),
+            json_path="BENCH_overload.json" if args.json else None))
     if "model_serving" in only:
         from benchmarks import model_serving
         emit(model_serving.run(

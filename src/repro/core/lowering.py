@@ -304,6 +304,56 @@ class JittedFuse(ops.Fuse):
 #: distinct shapes per chain.
 DEFAULT_BUCKETS: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
 
+
+# ---------------------------------------------------------------------------
+# degraded serving: cheap execution variants under overload
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DegradePolicy:
+    """How a low-priority request executes under overload pressure — only
+    variants the executable cache already holds, so degrading never pays a
+    fresh XLA trace on the hot path:
+
+    * ``per_row`` — route to the per-row jitted executable (always compiled
+      by the time any traffic flows; skips stack/pad/gather entirely);
+    * ``bucket_cap`` — when the request does batch, cap its padding bucket
+      (small buckets are the first ones traffic warms);
+    * ``competitive`` — False disables competitive replication for the
+      request (the runtime dispatches ONE replica of each wait-any group
+      instead of racing all of them — tail suppression is a luxury a
+      best-effort request does not get under overload).
+    """
+    per_row: bool = True
+    bucket_cap: Optional[int] = 8
+    competitive: bool = False
+
+
+#: thread-local carrying the active DegradePolicy: the executor sets it
+#: around a degraded request's node fn, and the exec-path router consults
+#: it — the policy must travel WITH the work onto the executor thread, so
+#: a context variable on the submitting thread would be invisible here
+_DEGRADE_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def degraded_execution(policy: Optional["DegradePolicy"]):
+    """Execute the enclosed chain calls under ``policy`` (None = no-op).
+    The exec-path router (``BatchedJittedFuse``) reads the active policy
+    via :func:`active_degrade` and picks the cheap, already-compiled
+    variant instead of the throughput-optimal one."""
+    prev = getattr(_DEGRADE_TLS, "policy", None)
+    _DEGRADE_TLS.policy = policy
+    try:
+        yield
+    finally:
+        _DEGRADE_TLS.policy = prev
+
+
+def active_degrade() -> Optional["DegradePolicy"]:
+    """The DegradePolicy in effect on this thread, or None."""
+    return getattr(_DEGRADE_TLS, "policy", None)
+
 #: per-row router timing is sampled 1-in-N (the measurement's host sync
 #: drains the async dispatch pipeline — it must not tax every
 #: steady-state per-row call); aligned with ChainProfile.PROBE_EVERY
@@ -683,6 +733,12 @@ class BatchedJittedFuse(JittedFuse):
         when the chain's measured crossover says per-row wins."""
         if n <= 1:
             return True
+        pol = active_degrade()
+        if pol is not None and pol.per_row:
+            # degraded request: the per-row executable is always warm and
+            # skips stack/pad/gather — take it regardless of the measured
+            # crossover, and don't let the call probe/feed the EWMA
+            return True
         if not self.adaptive_routing:
             return False
         route, probe = self.profile().route_decision(
@@ -829,6 +885,15 @@ class BatchedJittedFuse(JittedFuse):
                     out_rows[i] = self._row_call(t.rows[i])
                     continue
                 bucket = bucket_rows(k, self.bucket_sizes)
+                pol = active_degrade()
+                if pol is not None and pol.bucket_cap:
+                    # degraded: pad into the smallest already-configured
+                    # bucket <= cap that still fits — never a fresh shape,
+                    # so no fresh XLA trace on the overloaded hot path
+                    capped = tuple(b for b in self.bucket_sizes
+                                   if b <= pol.bucket_cap)
+                    if capped and k <= capped[-1]:
+                        bucket = bucket_rows(k, capped)
                 # pad the row LIST (repeating row 0) before stacking, so
                 # stacked shapes are always bucket-sized — padding on
                 # device would compile a fresh XLA program per distinct n,

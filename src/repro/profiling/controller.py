@@ -94,6 +94,8 @@ class SLOController:
         self.events: List[ControllerEvent] = []
         self._replanner = None          # lazily built default on_replan
         self._confirm_next = False      # a replan swapped; judge next tick
+        self._last_handler = None       # who performed the last swap
+                                        # (rollback target on failed confirm)
         self._next_replan_t = 0.0       # failure cooldown gate
         self._stop = False
         self._thread: Optional[threading.Thread] = None
@@ -160,6 +162,32 @@ class SLOController:
         arrivals = sum(
             1 for t in snap.get(f"dag/{name}/request_t", []) if t >= lo)
         return errs / max(1, errs, arrivals)
+
+    def protection_rates(self,
+                         snapshot: Optional[Dict[str, List[float]]] = None) \
+            -> Dict[str, float]:
+        """Overload-protection activity over the recent window, in events
+        per second: requests shed at the admission gate, expired before
+        dispatch, and admitted degraded.  These series are SEPARATE from
+        ``error_t`` by design — a deployment shedding by policy is
+        protecting itself, not failing, and must not read as an
+        error-rate SLO miss."""
+        snap = snapshot if snapshot is not None \
+            else self.runtime.metrics_snapshot()
+        name = self.deployed.dag.name
+        lo = time.perf_counter() - self.window_s
+
+        def count(key: str) -> int:
+            return sum(1 for t in snap.get(key, []) if t >= lo)
+
+        degraded = sum(
+            count(k) for k in snap
+            if k.startswith(f"admission/{name}/")
+            and k.endswith("/degraded_t"))
+        w = max(self.window_s, 1e-9)
+        return {"shed_rate": count(f"dag/{name}/shed_t") / w,
+                "expired_rate": count(f"dag/{name}/expired_t") / w,
+                "degraded_rate": degraded / w}
 
     def refresh_profile(self) -> bool:
         """Fold live ChainProfile measurements into the curves."""
@@ -229,12 +257,42 @@ class SLOController:
         slo_ok = cur_pred.meets(self.slo_p99_s) \
             and err_rate <= self.max_error_rate
         detail["slo_ok"] = slo_ok
+        # overload protection activity: shed/expired/degraded decisions
+        # ride their own metric series, so the controller can tell
+        # "overloaded and protecting itself" (admission gate active,
+        # surviving traffic healthy) from "missing SLO" (it is not)
+        prot = self.protection_rates(snap)
+        detail["protection"] = prot
+        detail["protecting"] = any(v > 0 for v in prot.values())
+        adm = getattr(self.runtime, "admission_for", lambda _n: None)(
+            self.deployed.dag.name)
+        if adm is not None:
+            # keep the gate's model pointed at the LIVE deployment: same
+            # plan, same measured curves, same applied config the
+            # controller just judged
+            adm.update(plan=self.deployed.plan, profile=self.profile,
+                       config=current)
+            detail["admission"] = adm.snapshot()
         if self._confirm_next:
             # the previous tick swapped generations: judge the post-swap
             # deployment against the SLO and say so
             self._confirm_next = False
-            detail["post_replan_confirm"] = {
+            confirm: Dict[str, Any] = {
                 "p99_ms": cur_pred.p99_s * 1e3, "slo_ok": slo_ok}
+            if not slo_ok:
+                # green failed its confirm: roll back to blue
+                # automatically, and cool down so the very next tick does
+                # not re-compile the same failing green
+                sb = getattr(self._last_handler, "swap_back", None)
+                rb = sb(f"post_replan_confirm failed: p99 "
+                        f"{cur_pred.p99_s * 1e3:.1f}ms, err {err_rate:.3f}") \
+                    if sb is not None else None
+                if rb:
+                    confirm["rollback"] = rb
+                    kind = "replan"
+                    detail["rolled_back"] = True
+                    self._next_replan_t = now + self.replan_cooldown_s
+            detail["post_replan_confirm"] = confirm
         if not slo_ok \
                 and self._needs_recompile(proposal) \
                 and proposal.predicted is not None \
@@ -258,6 +316,7 @@ class SLOController:
                     if getattr(result, "ok", False):
                         # green is live — confirm SLO on the next tick
                         self._confirm_next = True
+                        self._last_handler = handler
                     elif hasattr(result, "ok"):
                         self._next_replan_t = now + self.replan_cooldown_s
         self.applied = proposal

@@ -252,6 +252,9 @@ class BlueGreenReplanner:
             compile_flags = getattr(deployed, "compile_flags", None)
         self.compile_flags = compile_flags
         self.history: List[ReplanReport] = []
+        # set by a successful swap: everything needed to re-register blue
+        # atomically if the confirm tick shows green missing the SLO
+        self._rollback: Optional[Dict[str, Any]] = None
 
     #: reports kept (a controller re-escalating for hours must not grow
     #: the history without bound)
@@ -374,6 +377,8 @@ class BlueGreenReplanner:
             #    blue, blue's batchers drain and close on quiescence
             rep.phase = "swap"
             t0 = time.perf_counter()
+            blue_state = {"dag": blue, "plan": dep.plan,
+                          "pass_trace": getattr(dep, "pass_trace", None)}
             rt.register_dag(green.dag, plan=green.plan)
             swapped = True
             applied = proposal.apply_runtime(rt, green.dag,
@@ -383,6 +388,13 @@ class BlueGreenReplanner:
             dep.plan = green.plan
             dep.dag = green.dag
             dep.pass_trace = green.pass_trace
+            # keep blue resurrectable until the confirm tick passes: its
+            # batchers drain but its DAG/plan stay valid, so a failed
+            # confirm can swap it straight back in
+            self._rollback = blue_state
+            adm = getattr(rt, "admission_for", lambda _n: None)(blue.name)
+            if adm is not None:
+                adm.update(plan=green.plan, config=proposal)
             rep.timings_s["swap"] = time.perf_counter() - t0
             rep.phase = "done"
             rep.ok = True
@@ -397,3 +409,41 @@ class BlueGreenReplanner:
                     rt.discard_dag(green.dag)
                 except Exception:
                     pass
+
+    # -- rollback ------------------------------------------------------------
+    def can_swap_back(self) -> bool:
+        return self._rollback is not None
+
+    def swap_back(self, reason: str = "") -> Optional[Dict[str, Any]]:
+        """Automatic rollback: re-register the previous (blue) generation
+        after a swap whose confirm tick failed.  ``register_dag`` clears
+        blue's retired/draining marks atomically, so its (possibly fresh)
+        batchers serve immediately; green drains and retires exactly like
+        any superseded generation — zero dropped requests either way.
+        Records a ``replan/rollback`` metric and returns a small report,
+        or None when there is nothing to roll back to."""
+        state = self._rollback
+        if state is None:
+            return None
+        self._rollback = None
+        rt = self.runtime
+        dep = self.deployed
+        blue_dag, blue_plan = state["dag"], state["plan"]
+        rt.register_dag(blue_dag, plan=blue_plan)
+        dep.plan = blue_plan
+        dep.dag = blue_dag
+        if state["pass_trace"] is not None:
+            dep.pass_trace = state["pass_trace"]
+        adm = getattr(rt, "admission_for", lambda _n: None)(blue_dag.name)
+        if adm is not None:
+            adm.update(plan=blue_plan)
+        record = getattr(rt, "record_metric", None)
+        if record is not None:
+            record("replan/rollback", time.perf_counter())
+        report = {"rolled_back": True, "reason": reason,
+                  "dag": blue_dag.name,
+                  "restored_generation": blue_dag.generation}
+        if self.history:
+            self.history[-1].notes.append(
+                f"rolled back to gen {blue_dag.generation}: {reason}")
+        return report

@@ -49,6 +49,11 @@ class RuntimeNode:
     locality_ref_column: Optional[str] = None
     locality_const: Optional[str] = None
     plan_op_id: Optional[int] = None            # provenance into the IR
+    # competitive replication: nodes feeding the same wait-any consumer
+    # share a group id — under degraded serving only ONE member of each
+    # group is dispatched (no tail-suppression racing for best-effort
+    # traffic during overload)
+    competitive_group: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -124,6 +129,12 @@ class RuntimeDag:
                 plan_op_id=o.op_id,
             )
             out_name = nm
+        # annotate competitive groups: the inputs of a wait-any consumer
+        # with >=2 deps are racing replicas of the same computation
+        for nm, node in nodes.items():
+            if node.wait_any and len(node.deps) >= 2:
+                for d in node.deps:
+                    nodes[d].competitive_group = nm
         dag = cls(dag_name, nodes, names.get(plan.output_id, out_name))
         dag.validate()
         return dag

@@ -15,8 +15,10 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.core.lowering import DegradePolicy, degraded_execution
 from repro.runtime.kvs import KVS, CacheClient
 from repro.runtime.netmodel import NetModel, nbytes
+from repro.serving.admission import DeadlineExceeded
 
 _exec_ids = itertools.count()
 
@@ -33,6 +35,12 @@ class WorkItem:
     # planner needs (InferLine-style batch latency profiles)
     queue_s: Optional[float] = None
     exec_s: Optional[float] = None
+    # overload protection: absolute perf_counter deadline — the worker
+    # fails the item fast (DeadlineExceeded) if it dequeues it too late —
+    # and the degrade variant the admission gate picked, applied around
+    # the fn so the exec-path router sees it on the worker thread
+    deadline_t: Optional[float] = None
+    degrade: Optional[DegradePolicy] = None
 
 
 class ExecutionContext:
@@ -51,9 +59,13 @@ class ExecutionContext:
 
 class Executor:
     def __init__(self, kvs: KVS, net: NetModel, resource_class: str = "cpu",
-                 cache_bytes: int = 2 << 30):
-        self.id = f"{resource_class}-exec-{next(_exec_ids)}"
+                 cache_bytes: int = 2 << 30, reserved: bool = False):
+        tag = f"{resource_class}-rsvd" if reserved else resource_class
+        self.id = f"{tag}-exec-{next(_exec_ids)}"
         self.resource_class = resource_class
+        # reserved workers serve ONLY warm-up/canary traffic: a saturated
+        # serving pool cannot starve the canary and abort a good swap
+        self.reserved = reserved
         self.net = net
         self.cache = CacheClient(kvs, self.id, cache_bytes)
         self.q: "queue.Queue[WorkItem]" = queue.Queue()
@@ -80,6 +92,19 @@ class Executor:
             self.busy = True
             t_start = time.perf_counter()
             item.queue_s = t_start - item.enqueue_t
+            if item.deadline_t is not None and item.deadline_t <= t_start:
+                # the deadline passed while the item sat in this worker's
+                # queue: fail fast instead of burning the worker on a
+                # result nobody can use
+                item.exec_s = 0.0
+                try:
+                    item.callback(None, DeadlineExceeded(
+                        "deadline passed in executor queue",
+                        deadline_s=item.deadline_t), self.id)
+                finally:
+                    self.busy = False
+                    self.completed += 1
+                continue
             try:
                 self.net.charge_invoke()   # FaaS invocation overhead
                 # charge network for inputs shipped from other executors
@@ -87,7 +112,11 @@ class Executor:
                     if src is not None and src != self.id:
                         self.net.charge(nbytes(t))
                 ctx = ExecutionContext(self)
-                result = item.fn(item.tables, ctx)
+                if item.degrade is not None:
+                    with degraded_execution(item.degrade):
+                        result = item.fn(item.tables, ctx)
+                else:
+                    result = item.fn(item.tables, ctx)
                 item.exec_s = time.perf_counter() - t_start
                 item.callback(result, None, self.id)
             except BaseException as e:
@@ -107,7 +136,8 @@ class ExecutorPool:
 
     def __init__(self, kvs: KVS, net: NetModel,
                  n_cpu: int = 4, n_gpu: int = 0,
-                 cache_bytes: int = 2 << 30):
+                 cache_bytes: int = 2 << 30,
+                 reserved_cpu: int = 0, reserved_gpu: int = 0):
         self.kvs = kvs
         self.net = net
         self.cache_bytes = cache_bytes
@@ -117,19 +147,31 @@ class ExecutorPool:
             self.add_executor("cpu")
         for _ in range(n_gpu):
             self.add_executor("gpu")
+        for _ in range(reserved_cpu):
+            self.add_executor("cpu", reserved=True)
+        for _ in range(reserved_gpu):
+            self.add_executor("gpu", reserved=True)
         # function name -> executor ids allowed to run it (None = any in class)
         self.assignment: Dict[str, List[str]] = {}
 
-    def add_executor(self, resource_class: str) -> Executor:
-        ex = Executor(self.kvs, self.net, resource_class, self.cache_bytes)
+    def add_executor(self, resource_class: str, *,
+                     reserved: bool = False) -> Executor:
+        ex = Executor(self.kvs, self.net, resource_class, self.cache_bytes,
+                      reserved=reserved)
         with self._lock:
             self.executors[ex.id] = ex
         return ex
 
-    def by_class(self, resource_class: str) -> List[Executor]:
+    def by_class(self, resource_class: str, *,
+                 reserved: bool = False) -> List[Executor]:
+        """Serving workers of a class; ``reserved=True`` returns the
+        warm-up/canary pool instead.  The two never mix: serving traffic
+        cannot spill onto reserved workers, and reserved work does not
+        queue behind a saturated serving pool."""
         with self._lock:
             return [e for e in self.executors.values()
-                    if e.resource_class == resource_class]
+                    if e.resource_class == resource_class
+                    and e.reserved == reserved]
 
     def by_id(self, executor_id: str) -> Optional[Executor]:
         with self._lock:

@@ -18,15 +18,27 @@ import time
 from concurrent.futures import Future
 from typing import Any, Dict, List, Optional, Tuple
 
-from repro.core.lowering import DEFAULT_BUCKETS, bucket_rows
+from repro.core.lowering import DEFAULT_BUCKETS, DegradePolicy, bucket_rows
 from repro.core.table import DeviceTable, Table
 from repro.runtime.dag import RuntimeDag, RuntimeNode
 from repro.runtime.executor import ExecutorPool, WorkItem
 from repro.runtime.kvs import KVS
 from repro.runtime.netmodel import NetModel
+from repro.serving.admission import (AdmissionController, DeadlineExceeded,
+                                     Overloaded)
 from repro.serving.batcher import Batcher
 
 _req_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class RequestContext:
+    """Per-request overload-protection state, carried from ``call_dag``
+    through node dispatch, batching, and executor queues."""
+    klass: str = "interactive"
+    deadline_t: Optional[float] = None    # absolute perf_counter deadline
+    deadline_s: Optional[float] = None    # the caller's relative budget
+    degrade: Optional[DegradePolicy] = None   # set when admitted degraded
 
 
 class Runtime:
@@ -34,11 +46,16 @@ class Runtime:
                  net: Optional[NetModel] = None,
                  cache_bytes: int = 2 << 30,
                  max_batch: int = 10, batch_wait_ms: float = 2.0,
-                 seed: int = 0):
+                 seed: int = 0,
+                 reserved_cpu: int = 0, reserved_gpu: int = 0):
         self.net = net or NetModel()
         self.kvs = KVS(self.net)
         self.pool = ExecutorPool(self.kvs, self.net, n_cpu=n_cpu, n_gpu=n_gpu,
-                                 cache_bytes=cache_bytes)
+                                 cache_bytes=cache_bytes,
+                                 reserved_cpu=reserved_cpu,
+                                 reserved_gpu=reserved_gpu)
+        # per-dag admission gates (set_admission); None = accept everything
+        self._admission: Dict[str, AdmissionController] = {}
         self.dags: Dict[str, RuntimeDag] = {}
         self.plans: Dict[str, Any] = {}     # dag name -> PhysicalPlan
         self.max_batch = max_batch
@@ -208,7 +225,15 @@ class Runtime:
 
     # -- scheduling -------------------------------------------------------------
     def pick_executor(self, node: RuntimeNode,
-                      locality_key: Optional[str] = None):
+                      locality_key: Optional[str] = None,
+                      prefer_reserved: bool = False):
+        if prefer_reserved:
+            # warm-up/canary work for a not-yet-live generation: the
+            # reserved pool (when provisioned) keeps it off the serving
+            # workers, so a saturated serving pool can't starve a canary
+            rsvd = self.pool.by_class(node.resource_class, reserved=True)
+            if rsvd:
+                return min(rsvd, key=lambda e: e.load)
         cands = self.pool.candidates(node.name, node.resource_class)
         if not cands:
             raise RuntimeError(
@@ -222,14 +247,25 @@ class Runtime:
         best = [e for e in cands if e.load == lo]
         return self._rng.choice(best)
 
+    def _is_prepared(self, dag: Optional[RuntimeDag]) -> bool:
+        """True for a generation that is NOT the live one for its name —
+        i.e. warm-up/canary traffic (pre-swap green).  Checked at dispatch
+        time, not batcher creation: the same batcher keeps serving after
+        the swap makes its generation live."""
+        return dag is not None and self.dags.get(dag.name) is not dag
+
     def dispatch(self, node: RuntimeNode, tables: List[Table],
                  produced_on: List[Optional[str]], callback,
                  locality_key: Optional[str] = None,
-                 dag: Optional[RuntimeDag] = None):
-        if node.batching:
+                 dag: Optional[RuntimeDag] = None,
+                 ctx: Optional[RequestContext] = None):
+        if node.batching and (ctx is None or ctx.degrade is None):
             self._dispatch_batched(node, tables, produced_on, callback,
-                                   locality_key, dag)
+                                   locality_key, dag, ctx)
             return
+        # degraded requests bypass the batcher entirely: merging them
+        # would degrade their batch-mates, and the per-row executable the
+        # DegradePolicy routes to needs no coalescing anyway
         # a device-resident input lives in its producer's accelerator
         # memory: the consumer MUST run there — shipping the batch to
         # another executor would be exactly the host round-trip (or
@@ -241,9 +277,12 @@ class Runtime:
                 ex = self.pool.by_id(src)
                 break
         if ex is None:
-            ex = self.pick_executor(node, locality_key)
+            ex = self.pick_executor(node, locality_key,
+                                    prefer_reserved=self._is_prepared(dag))
         ex.submit(WorkItem(fn=node.fn, tables=tables,
-                           produced_on=produced_on, callback=callback))
+                           produced_on=produced_on, callback=callback,
+                           deadline_t=ctx.deadline_t if ctx else None,
+                           degrade=ctx.degrade if ctx else None))
 
     #: per-series retention: enough history for any rate/percentile window
     #: the controller uses, while keeping snapshot cost and memory constant
@@ -318,7 +357,8 @@ class Runtime:
 
     def _dispatch_batched(self, node: RuntimeNode, tables, produced_on,
                           callback, locality_key: Optional[str] = None,
-                          dag: Optional[RuntimeDag] = None):
+                          dag: Optional[RuntimeDag] = None,
+                          ctx: Optional[RequestContext] = None):
         """Queue one request into the node's batcher.  The batch function
         issues ONE executor submission per batch — a single vmapped XLA
         dispatch when the node lowered to a ``BatchedJittedFuse``
@@ -338,29 +378,40 @@ class Runtime:
             b = self._batchers.get(key)
             if b is None:
                 cfg = self._node_batch_cfg.get((dag_name, node.name), {})
-                # on_drop: a submit can slip in between the sweep's
-                # quiescence check and close() — the drained item's
-                # request callback must still fire, or its future would
-                # hang forever (nobody waits on Batcher item events here)
-                b = Batcher(self._make_batch_fn(node, dag_name),
+                mkey = f"batch/{dag_name}/{node.name}" if dag_name \
+                    else f"batch/{node.name}"
+
+                def _drop(args, err, _mkey=mkey):
+                    # a submit can slip in between the sweep's quiescence
+                    # check and close() — the drained item's request
+                    # callback must still fire, or its future would hang
+                    # forever (nobody waits on Batcher item events here).
+                    # Deadline expiries land here too; count them.
+                    if isinstance(err, DeadlineExceeded):
+                        self.record_metric(f"{_mkey}/expired_t",
+                                           time.perf_counter())
+                    args[2](None, err, None)
+
+                b = Batcher(self._make_batch_fn(node, dag_name, dag),
                             max_batch=int(cfg.get("max_batch",
                                                   self.max_batch)),
                             max_wait_ms=float(cfg.get("batch_wait_ms",
                                                       self.batch_wait_ms)),
-                            on_drop=lambda args, err: args[2](None, err,
-                                                              None))
+                            on_drop=_drop)
                 self._batchers[key] = b
         try:
-            b.submit((tables, produced_on, callback, locality_key))
+            b.submit((tables, produced_on, callback, locality_key, ctx),
+                     deadline_t=ctx.deadline_t if ctx else None)
         except RuntimeError as e:       # closed under our feet (stop())
             callback(None, e, None)
 
-    def _make_batch_fn(self, node: RuntimeNode, dag_name: str = ""):
+    def _make_batch_fn(self, node: RuntimeNode, dag_name: str = "",
+                       dag: Optional[RuntimeDag] = None):
         def batched(arg_list):
             # merge all request tables into one invocation (paper §4)
             live = []
             for entry in arg_list:
-                ts, po, cb, lk = entry
+                ts, po, cb, lk, _ctx = entry
                 if not ts:
                     # a request with no input tables can't join the merge;
                     # fail it alone instead of crashing the whole batch
@@ -376,15 +427,18 @@ class Runtime:
                 # — the fn sees an empty table, returns an empty result
                 template = live[0][0][0]
                 big = template.with_rows(
-                    [r for ts, _, _, _ in live for t in ts for r in t.rows])
+                    [r for ts, _, _, _, _ in live for t in ts
+                     for r in t.rows])
                 # locality: any request's resolved ref steers the whole
                 # batch (members share the node, hence typically the ref)
-                lk = next((k for _, _, _, k in live if k is not None), None)
-                ex = self.pick_executor(node, lk)
+                lk = next((k for _, _, _, k, _ in live if k is not None),
+                          None)
+                ex = self.pick_executor(
+                    node, lk, prefer_reserved=self._is_prepared(dag))
             except BaseException as e:
                 # nobody waits on the Batcher items — errors must reach the
                 # per-request callbacks, not die in the batch thread
-                for _, _, cb, _ in live:
+                for _, _, cb, _, _ in live:
                     try:
                         cb(None, e, None)
                     except BaseException:
@@ -392,8 +446,16 @@ class Runtime:
                 return [None] * len(arg_list)
             fn = node.batched_fn or node.fn
             t_submit = time.perf_counter()
+            # the merged batch inherits the LOOSEST member deadline: a
+            # batch is only pointless once every member's deadline passed
+            # (per-member expiry already happened in the Batcher)
+            deadlines = [c.deadline_t if c is not None else None
+                         for _, _, _, _, c in live]
+            batch_deadline = (max(deadlines)
+                              if deadlines and None not in deadlines
+                              else None)
             item = WorkItem(fn=fn, tables=[big], produced_on=[None],
-                            callback=None)
+                            callback=None, deadline_t=batch_deadline)
 
             # metric series are keyed by (dag, node) so two DAGs sharing a
             # node name don't interleave their histograms (generations of
@@ -410,7 +472,7 @@ class Runtime:
                     self.record_metric(f"{mkey}/exec_s",
                                        item.exec_s)
                 if error is not None:
-                    for _, _, cb, _ in live:
+                    for _, _, cb, _, _ in live:
                         cb(None, error, exec_id)
                     return
                 if isinstance(result, DeviceTable):
@@ -422,7 +484,7 @@ class Runtime:
                     # cached shapes.  No host copy happens here.
                     buckets = node.batch_buckets or DEFAULT_BUCKETS
                     pos = 0
-                    for ts, _, cb, _ in live:
+                    for ts, _, cb, _, _ in live:
                         k = sum(len(t.rows) for t in ts)
                         span = range(pos, pos + k)
                         pos += k
@@ -463,7 +525,7 @@ class Runtime:
                     for r in result.rows:
                         by_id.setdefault(r.row_id, []).append(r)
                 pos = 0
-                for ts, _, cb, _ in live:
+                for ts, _, cb, _, _ in live:
                     out_rows = []
                     for t in ts:
                         for r0 in t.rows:
@@ -489,15 +551,66 @@ class Runtime:
 
         return batched
 
+    # -- admission control ----------------------------------------------------
+    def set_admission(self, dag_name: str,
+                      admission: Optional[AdmissionController]) -> None:
+        """Install (or clear, with None) the overload-protection gate for
+        a DAG's front door.  Without a gate, ``call_dag`` still honors
+        explicit ``deadline_s`` (expiry in batcher/executor queues) but
+        never sheds."""
+        if admission is None:
+            self._admission.pop(dag_name, None)
+        else:
+            self._admission[dag_name] = admission
+
+    def admission_for(self, dag_name: str) -> Optional[AdmissionController]:
+        return self._admission.get(dag_name)
+
     # -- execution ----------------------------------------------------------------
-    def call_dag(self, name: str, table: Table) -> Future:
+    def call_dag(self, name: str, table: Table, *,
+                 deadline_s: Optional[float] = None,
+                 klass: Optional[str] = None) -> Future:
         # ONE registry read per request: the whole execution runs on the
         # generation that was live at arrival, even if a blue/green swap
         # lands mid-flight
-        return self.call_dag_object(self.dags[name], table, record=True)
+        dag = self.dags[name]
+        t0 = time.perf_counter()
+        ctx: Optional[RequestContext] = None
+        adm = self._admission.get(name)
+        if adm is not None:
+            d = adm.admit(klass, deadline_s)
+            kname = d.klass
+            if deadline_s is None:
+                deadline_s = d.deadline_s
+            if not d.admitted:
+                # typed fast-fail: the caller learns in microseconds —
+                # not after a blown deadline — that the deployment is
+                # protecting itself.  Sheds get their OWN series (NOT
+                # error_t): the controller must distinguish "overloaded
+                # and shedding by design" from "failing".
+                now = time.perf_counter()
+                self.record_metric(f"dag/{name}/shed_t", now)
+                self.record_metric(f"admission/{name}/{kname}/shed_t", now)
+                fut = Future()
+                fut.set_exception(Overloaded(
+                    f"{name}: {kname} request shed ({d.reason})",
+                    klass=kname, reason=d.reason,
+                    estimate_s=d.estimate_s, deadline_s=deadline_s))
+                return fut
+            if d.action == "degrade":
+                self.record_metric(f"admission/{name}/{kname}/degraded_t",
+                                   time.perf_counter())
+            ctx = RequestContext(klass=kname, degrade=d.degrade)
+        if ctx is None and (deadline_s is not None or klass is not None):
+            ctx = RequestContext(klass=klass or "interactive")
+        if ctx is not None and deadline_s is not None:
+            ctx.deadline_s = deadline_s
+            ctx.deadline_t = t0 + deadline_s
+        return self.call_dag_object(dag, table, record=True, ctx=ctx)
 
     def call_dag_object(self, dag: RuntimeDag, table: Table, *,
-                        record: bool = False) -> Future:
+                        record: bool = False,
+                        ctx: Optional[RequestContext] = None) -> Future:
         """Execute a DAG *object* directly, registered or not — the
         blue/green replanner drives warm-up and canary requests through a
         prepared (not yet traffic-visible) green generation this way.
@@ -515,11 +628,22 @@ class Runtime:
             def _record(f: Future):
                 lat = time.perf_counter() - t0
                 try:
-                    failed = f.exception() is not None
-                except BaseException:
-                    failed = True
-                if not failed:
+                    exc = f.exception()
+                except BaseException as e:
+                    exc = e
+                if exc is None:
                     self.record_metric(f"dag/{name}/latency_s", lat)
+                elif isinstance(exc, DeadlineExceeded):
+                    # admitted but its deadline passed in a queue: an
+                    # EXPIRY, not an error — the request failed fast by
+                    # design, in a fraction of its budget
+                    self.record_metric(f"dag/{name}/expired_t",
+                                       time.perf_counter())
+                    self.record_metric(f"dag/{name}/shed_latency_s", lat)
+                elif isinstance(exc, Overloaded):
+                    self.record_metric(f"dag/{name}/shed_t",
+                                       time.perf_counter())
+                    self.record_metric(f"dag/{name}/shed_latency_s", lat)
                 else:
                     # error-path latency goes to its OWN series plus an
                     # error counter whose values are completion
@@ -533,7 +657,7 @@ class Runtime:
                                        time.perf_counter())
             fut.add_done_callback(_record)
         self._track_execution(dag, fut)
-        _DagExecution(self, dag, table, fut).start()
+        _DagExecution(self, dag, table, fut, ctx).start()
         return fut
 
     def stop(self):
@@ -546,19 +670,38 @@ class Runtime:
 
 class _DagExecution:
     def __init__(self, rt: Runtime, dag: RuntimeDag, table: Table,
-                 fut: Future):
+                 fut: Future, ctx: Optional[RequestContext] = None):
         self.rt = rt
         self.dag = dag
         self.input = table
         self.fut = fut
+        self.ctx = ctx
         self.lock = threading.Lock()
         self.results: Dict[str, Table] = {}
         self.produced_on: Dict[str, Optional[str]] = {}
         self.dispatched: set = set()
+        # competitive groups already dispatched for a degraded request
+        # (one replica each instead of racing all of them)
+        self._groups_fired: set = set()
         self.t0 = time.perf_counter()
 
     def start(self):
         self._advance()
+
+    def _expired(self) -> bool:
+        """Fail the whole execution fast once the request's deadline has
+        passed — downstream nodes are never dispatched, so an expired
+        request stops consuming capacity at the next DAG edge."""
+        ctx = self.ctx
+        if ctx is None or ctx.deadline_t is None:
+            return False
+        if ctx.deadline_t > time.perf_counter():
+            return False
+        if not self.fut.done():
+            self.fut.set_exception(DeadlineExceeded(
+                f"{self.dag.name}: deadline passed mid-execution",
+                klass=ctx.klass, deadline_s=ctx.deadline_s))
+        return True
 
     def _ready(self, node: RuntimeNode) -> Optional[List[str]]:
         """deps to consume, or None if not ready."""
@@ -570,6 +713,11 @@ class _DagExecution:
         return None
 
     def _advance(self):
+        if self._expired():
+            return
+        degraded_serial = (self.ctx is not None
+                           and self.ctx.degrade is not None
+                           and not self.ctx.degrade.competitive)
         with self.lock:
             to_run = []
             for node in self.dag.nodes.values():
@@ -578,6 +726,15 @@ class _DagExecution:
                 deps = self._ready(node)
                 if deps is None:
                     continue
+                if degraded_serial and node.competitive_group is not None:
+                    # degraded request: dispatch ONE replica per
+                    # competitive group — racing k copies for tail
+                    # suppression is capacity a best-effort request does
+                    # not get under overload (wait-any fires on the one)
+                    if node.competitive_group in self._groups_fired:
+                        self.dispatched.add(node.name)
+                        continue
+                    self._groups_fired.add(node.competitive_group)
                 self.dispatched.add(node.name)
                 tables = ([self.input] if not node.deps else
                           [self.results[d] for d in deps])
@@ -601,7 +758,7 @@ class _DagExecution:
                     pass
             self.rt.dispatch(node, tables, srcs,
                              self._make_callback(node), locality_key,
-                             dag=self.dag)
+                             dag=self.dag, ctx=self.ctx)
 
     def _make_callback(self, node: RuntimeNode):
         def cb(result, error, exec_id):

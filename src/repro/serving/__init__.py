@@ -1,0 +1,22 @@
+"""Serving-layer building blocks: request batching and overload
+protection (admission control, request classes, deadlines).
+
+* :mod:`repro.serving.batcher` — deadline-aware micro-batching
+  (``Batcher``): adaptive coalescing windows, earliest-deadline-first
+  backlog ordering, pre-dispatch expiry;
+* :mod:`repro.serving.admission` — the front-door gate
+  (``AdmissionController``): per-class token buckets plus a
+  priority-ordered M/M/c estimator check, typed ``Overloaded`` /
+  ``DeadlineExceeded`` fast-fail errors, and ``DegradePolicy``-based
+  degraded serving for low-priority traffic.
+"""
+from repro.serving.admission import (AdmissionController, ClassPolicy,
+                                     DeadlineExceeded, Decision, Overloaded,
+                                     TokenBucket, default_classes)
+from repro.serving.batcher import Batcher, BatchItem
+
+__all__ = [
+    "AdmissionController", "Batcher", "BatchItem", "ClassPolicy",
+    "DeadlineExceeded", "Decision", "Overloaded", "TokenBucket",
+    "default_classes",
+]

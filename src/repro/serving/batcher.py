@@ -3,6 +3,15 @@
 Collects individual requests into one batched model invocation (pad to the
 batch bucket), runs a single jitted call, and demultiplexes the results.
 Used by the runtime's batch-aware executor; also usable standalone.
+
+Deadline awareness (overload protection): items may carry an absolute
+``deadline_t``.  The flush loop orders its backlog earliest-deadline-first
+(plain FIFO when no item has a deadline, so the steady-state path is
+untouched), and items whose deadline has already passed are *expired*
+before dispatch — they fail fast with a typed
+:class:`~repro.serving.admission.DeadlineExceeded` instead of occupying
+batch slots, and ``on_drop`` + the ``expired`` counter surface every such
+decision to the runtime's metrics.
 """
 from __future__ import annotations
 
@@ -13,6 +22,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serving.admission import DeadlineExceeded
+
 
 #: queued by close() to wake the batch loop out of its poll immediately —
 #: without it, close() blocks its caller (possibly an executor callback
@@ -21,14 +32,21 @@ _WAKE = object()
 
 
 class BatchItem:
-    __slots__ = ("args", "event", "result", "error", "enqueue_t")
+    __slots__ = ("args", "event", "result", "error", "enqueue_t",
+                 "deadline_t", "done")
 
-    def __init__(self, args):
+    def __init__(self, args, deadline_t: Optional[float] = None):
         self.args = args
         self.event = threading.Event()
         self.result = None
         self.error: Optional[BaseException] = None
         self.enqueue_t = time.perf_counter()
+        # absolute perf_counter time after which dispatching is pointless
+        self.deadline_t = deadline_t
+        # completion is idempotent: exactly ONE path (flush, expiry, close
+        # drain, call-timeout) decrements the accepted-minus-completed
+        # counter, whichever claims the item first
+        self.done = False
 
 
 class Batcher:
@@ -72,14 +90,31 @@ class Batcher:
         # the batch loop pops items before running fn, so the queue can be
         # empty while a flush still holds live requests
         self._pending = 0
+        # items popped off the queue but deferred past a full flush (EDF
+        # overflow): owned by the batch loop thread; close() drains it
+        # after joining that thread
+        self._backlog: List[BatchItem] = []
         self._gap_ewma: Optional[float] = None
         self._last_submit_t: Optional[float] = None
+        #: items failed before dispatch because their deadline passed
+        self.expired = 0
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
         self.batch_sizes: List[int] = []
 
-    def submit(self, args) -> BatchItem:
-        item = BatchItem(args)
+    def _complete(self, item: BatchItem) -> bool:
+        """Claim ``item``'s completion: True for exactly one caller.  The
+        winner decrements the pending counter; losers must not touch the
+        item's result/error."""
+        with self._lock:
+            if item.done:
+                return False
+            item.done = True
+            self._pending -= 1
+            return True
+
+    def submit(self, args, deadline_t: Optional[float] = None) -> BatchItem:
+        item = BatchItem(args, deadline_t)
         with self._lock:
             if self._stop:
                 raise RuntimeError("batcher is closed")
@@ -138,22 +173,59 @@ class Batcher:
             return self.max_wait
         return max(0.0, 2.0 * self.max_wait - gap)
 
-    def call(self, args, timeout: Optional[float] = 30.0):
-        item = self.submit(args)
+    def call(self, args, timeout: Optional[float] = 30.0,
+             deadline_t: Optional[float] = None):
+        item = self.submit(args, deadline_t)
         if not item.event.wait(timeout):
-            raise TimeoutError("batched call timed out")
+            if self._complete(item):
+                # claimed: the flush loop will skip this item, and the
+                # accepted-minus-completed counter stays honest — a timed
+                # out call must never wedge quiescent()/retirement
+                item.error = TimeoutError("batched call timed out")
+                item.event.set()
+                raise item.error
+            # lost the race: the flush completed it concurrently with our
+            # timeout — fall through to its real result
         if item.error is not None:
             raise item.error
         return item.result
 
-    def _loop(self):
-        while not self._stop:
+    def _fail_undispatched(self, item: BatchItem, err: BaseException):
+        """Fail an item that never reached a dispatch (expiry, close
+        drain); no-op if another path already claimed it."""
+        if not self._complete(item):
+            return
+        item.error = err
+        item.event.set()
+        if self.on_drop is not None:
+            try:
+                self.on_drop(item.args, err)
+            except BaseException:
+                pass
+
+    def _collect(self) -> List[BatchItem]:
+        """One flush worth of items: queue arrivals (holding the adaptive
+        window open only when there is no deferred backlog) merged with
+        the backlog, expired items failed, the rest EDF-ordered."""
+        items: List[BatchItem] = []
+        if self._backlog:
+            # deferred items already waited out a window — drain whatever
+            # the queue has RIGHT NOW and flush without holding another
+            while len(items) + len(self._backlog) < self.max_batch:
+                try:
+                    nxt = self.q.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is _WAKE:
+                    break
+                items.append(nxt)
+        else:
             try:
                 first = self.q.get(timeout=0.1)
             except queue.Empty:
-                continue
+                return []
             if first is _WAKE:
-                continue                    # close() signal; re-check _stop
+                return []                   # close() signal; re-check _stop
             items = [first]
             deadline = time.perf_counter() + self.effective_wait()
             while len(items) < self.max_batch:
@@ -167,6 +239,34 @@ class Batcher:
                 if nxt is _WAKE:
                     break                   # flush what we hold, then exit
                 items.append(nxt)
+        pool = self._backlog + items        # backlog first: it is older
+        self._backlog = []
+        now = time.perf_counter()
+        live: List[BatchItem] = []
+        for it in pool:
+            if it.done:
+                continue                    # call() timeout already claimed
+            if it.deadline_t is not None and it.deadline_t <= now:
+                self.expired += 1
+                self._fail_undispatched(it, DeadlineExceeded(
+                    "deadline passed before dispatch",
+                    deadline_s=it.deadline_t))
+            else:
+                live.append(it)
+        if any(it.deadline_t is not None for it in live):
+            # earliest deadline first; deadline-less items ride behind in
+            # arrival order (sort is stable).  Plain FIFO traffic never
+            # reaches this sort.
+            live.sort(key=lambda it: (it.deadline_t is None,
+                                      it.deadline_t or 0.0))
+        self._backlog = live[self.max_batch:]
+        return live[:self.max_batch]
+
+    def _loop(self):
+        while not self._stop:
+            items = self._collect()
+            if not items:
+                continue
             self.batch_sizes.append(len(items))
             try:
                 results = self.fn([it.args for it in items])
@@ -176,9 +276,8 @@ class Batcher:
                 for it in items:
                     it.error = e
             for it in items:
-                it.event.set()
-            with self._lock:
-                self._pending -= len(items)
+                if self._complete(it):
+                    it.event.set()
 
     def close(self):
         """Stop the batch thread and fail anything still queued.
@@ -199,6 +298,9 @@ class Batcher:
         self.q.put(_WAKE)
         if threading.current_thread() is not self._thread:
             self._thread.join(timeout=1.0)
+        # drain the EDF backlog as well as the queue: deferred items are
+        # just as undispatched as queued ones
+        leftovers, self._backlog = list(self._backlog), []
         while True:
             try:
                 it = self.q.get_nowait()
@@ -206,12 +308,7 @@ class Batcher:
                 break
             if it is _WAKE:
                 continue
-            it.error = RuntimeError("batcher closed before dispatch")
-            it.event.set()
-            if self.on_drop is not None:
-                try:
-                    self.on_drop(it.args, it.error)
-                except BaseException:
-                    pass
-            with self._lock:
-                self._pending -= 1
+            leftovers.append(it)
+        for it in leftovers:
+            self._fail_undispatched(
+                it, RuntimeError("batcher closed before dispatch"))

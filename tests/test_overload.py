@@ -1,0 +1,440 @@
+"""Overload protection: deadline-aware admission control, request
+classes, and degraded serving.
+
+* typed fast-fail: shed requests carry ``Overloaded`` (class, reason,
+  estimate); requests whose deadline passes in a queue carry
+  ``DeadlineExceeded`` and never reach a dispatch;
+* the Batcher orders batches earliest-deadline-first and expires
+  past-deadline items before dispatch (``expired`` counter + on_drop);
+* ``Batcher.call``'s timeout path counts the item as completed, so
+  ``quiescent()`` cannot wedge generation retirement;
+* the admission gate is priority-ordered: a class's estimate is computed
+  at the arrival rate of traffic at-or-above its priority, so
+  best-effort traffic sheds/degrades first while interactive traffic is
+  modeled against only its peers;
+* an open-loop burst at 3x the saturating rate: interactive goodput p99
+  meets the SLO while best_effort is shed/degraded, counters reconcile.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core.dataflow import Dataflow
+from repro.core.lowering import DegradePolicy, active_degrade, \
+    degraded_execution
+from repro.core.table import Table
+from repro.runtime.netmodel import NetModel
+from repro.runtime.runtime import Runtime
+from repro.serving.admission import (AdmissionController, ClassPolicy,
+                                     DeadlineExceeded, Overloaded,
+                                     TokenBucket)
+from repro.serving.batcher import Batcher
+
+
+# ---------------------------------------------------------------------------
+# Batcher: EDF ordering, expiry, call-timeout accounting
+# ---------------------------------------------------------------------------
+
+def test_batcher_call_timeout_counts_as_completed():
+    """A timed-out ``call`` must not leave the accepted-minus-completed
+    counter dangling: pre-fix, ``quiescent()`` stayed False forever and
+    wedged generation retirement."""
+    release = threading.Event()
+
+    def fn(args):
+        release.wait(10.0)
+        return [a * 2 for a in args]
+
+    b = Batcher(fn, max_batch=1, max_wait_ms=0.0)
+    try:
+        # the first item occupies the flush loop; the second times out
+        # while queued behind it
+        first = b.submit(1)
+        with pytest.raises(TimeoutError):
+            b.call(2, timeout=0.15)
+        release.set()
+        assert first.event.wait(5.0)
+        deadline = time.perf_counter() + 5.0
+        while not b.quiescent():
+            assert time.perf_counter() < deadline, \
+                "timed-out call wedged quiescent()"
+            time.sleep(0.01)
+    finally:
+        release.set()
+        b.close()
+
+
+def test_batcher_call_returns_result_and_stays_quiescent():
+    b = Batcher(lambda args: [a + 1 for a in args], max_batch=4,
+                max_wait_ms=0.0)
+    try:
+        assert b.call(41, timeout=5.0) == 42
+        assert b.quiescent()
+    finally:
+        b.close()
+
+
+def test_batcher_orders_batch_earliest_deadline_first():
+    release = threading.Event()
+    seen = []
+
+    def fn(args):
+        if args == ["gate"]:
+            release.wait(10.0)
+        else:
+            seen.extend(args)
+        return list(args)
+
+    # long fixed window so the three queued items pool into ONE flush
+    b = Batcher(fn, max_batch=4, max_wait_ms=100.0, adaptive_wait=False)
+    try:
+        gate = b.submit("gate")
+        time.sleep(0.25)                 # gate batch dispatched alone,
+        now = time.perf_counter()        # its fn now blocks the loop
+        b.submit("late", deadline_t=now + 30.0)
+        b.submit("soon", deadline_t=now + 10.0)
+        b.submit("never")                # deadline-less rides behind
+        release.set()
+        assert gate.event.wait(5.0)
+        deadline = time.perf_counter() + 5.0
+        while len(seen) < 3 and time.perf_counter() < deadline:
+            time.sleep(0.01)
+        # submitted late-soon-never; dispatched earliest-deadline-first
+        assert seen == ["soon", "late", "never"]
+    finally:
+        release.set()
+        b.close()
+
+
+def test_batcher_expires_past_deadline_items_before_dispatch():
+    release = threading.Event()
+    ran, dropped = [], []
+
+    def fn(args):
+        if args == ["gate"]:
+            release.wait(10.0)
+        else:
+            ran.extend(args)
+        return list(args)
+
+    b = Batcher(fn, max_batch=4, max_wait_ms=0.0,
+                on_drop=lambda args, err: dropped.append((args, err)))
+    try:
+        gate = b.submit("gate")
+        time.sleep(0.05)                 # gate's fn occupies the loop
+        doomed = b.submit("doomed",
+                          deadline_t=time.perf_counter() - 0.001)
+        ok = b.submit("ok")
+        release.set()
+        assert gate.event.wait(5.0)
+        assert doomed.event.wait(5.0)
+        assert isinstance(doomed.error, DeadlineExceeded)
+        assert ok.event.wait(5.0) and ok.error is None
+        assert "doomed" not in ran          # never reached a dispatch
+        assert b.expired == 1
+        assert len(dropped) == 1 and dropped[0][0] == "doomed"
+        assert b.quiescent()
+    finally:
+        release.set()
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# admission gate: token buckets, priority ordering, degrade-not-shed
+# ---------------------------------------------------------------------------
+
+def test_token_bucket_limits_and_refills():
+    tb = TokenBucket(rate=100.0, burst=2)
+    assert tb.try_take() and tb.try_take()
+    assert not tb.try_take()
+    time.sleep(0.03)                     # ~3 tokens refilled (cap 2)
+    assert tb.try_take()
+
+
+def test_admission_rate_limit_sheds_with_reason():
+    adm = AdmissionController(classes={
+        "best_effort": ClassPolicy("best_effort", priority=0,
+                                   rate=1.0, burst=1)})
+    first = adm.admit("best_effort")
+    second = adm.admit("best_effort")
+    assert first.admitted
+    assert second.action == "shed" and second.reason == "rate_limit"
+    c = adm.snapshot()
+    assert c["best_effort/offered"] == 2
+    assert c["best_effort/admitted"] + c["best_effort/shed"] == 2
+
+
+class _RateGate(AdmissionController):
+    """Estimator stub: p99 proportional to the modeled arrival rate, so
+    the priority ordering is observable without a real plan."""
+
+    def _estimate_p99(self, lam: float) -> float:
+        return 0.01 * lam
+
+
+def test_priority_ordered_estimate_degrades_low_priority_first():
+    adm = _RateGate(plan=object(), profile=object(), reestimate_s=0.0)
+    # ~40 offered interactive + 40 best_effort inside the measurement
+    # window: best_effort is modeled at the TOTAL rate (priority 0
+    # competes with everything) while interactive sees only its peers
+    for _ in range(40):
+        adm.admit("interactive", deadline_s=0.5)
+        adm.admit("best_effort", deadline_s=0.5)
+    d_hi = adm.admit("interactive", deadline_s=0.5)
+    d_lo = adm.admit("best_effort", deadline_s=0.5)
+    assert d_hi.action == "admit", d_hi
+    # best_effort's estimate exceeds its deadline -> degraded rather
+    # than shed, because its default policy carries a DegradePolicy
+    assert d_lo.action == "degrade", d_lo
+    assert d_lo.reason == "deadline_risk"
+    assert isinstance(d_lo.degrade, DegradePolicy)
+    assert d_lo.estimate_s is not None \
+        and d_lo.estimate_s > (d_hi.estimate_s or 0.0)
+
+
+def test_unknown_class_rides_at_the_bottom():
+    adm = AdmissionController()
+    d = adm.admit("mystery")
+    assert d.admitted
+    assert adm.policy("mystery").priority == 0
+
+
+# ---------------------------------------------------------------------------
+# degraded execution context: the router consults the active policy
+# ---------------------------------------------------------------------------
+
+def test_degraded_execution_is_scoped_and_restores():
+    assert active_degrade() is None
+    pol = DegradePolicy(per_row=True, bucket_cap=4)
+    with degraded_execution(pol):
+        assert active_degrade() is pol
+        with degraded_execution(None):
+            assert active_degrade() is None
+        assert active_degrade() is pol
+    assert active_degrade() is None
+
+
+# ---------------------------------------------------------------------------
+# runtime integration: typed sheds, pre-dispatch expiry
+# ---------------------------------------------------------------------------
+
+def _sleepy_flow(seen, service_s=0.01):
+    def slow(i: int) -> int:
+        seen.append(i)
+        time.sleep(service_s)
+        return i
+
+    fl = Dataflow([("i", int)])
+    fl.output = fl.map(slow, names=["i"], batching=True)
+    return fl
+
+
+def test_call_dag_shed_carries_typed_overloaded():
+    rt = Runtime(n_cpu=2, net=NetModel(scale=0.0))
+    seen = []
+    try:
+        _sleepy_flow(seen).deploy(rt, name="ov")
+        rt.set_admission("ov", AdmissionController(classes={
+            "best_effort": ClassPolicy("best_effort", priority=0,
+                                       rate=0.001, burst=1)}))
+        ok = rt.call_dag("ov", Table([("i", int)], [(1,)]),
+                         klass="best_effort")
+        assert ok.result(timeout=10).rows[0].values[0] == 1
+        shed = rt.call_dag("ov", Table([("i", int)], [(2,)]),
+                           klass="best_effort")
+        with pytest.raises(Overloaded) as ei:
+            shed.result(timeout=10)
+        assert ei.value.klass == "best_effort"
+        assert ei.value.reason == "rate_limit"
+        snap = rt.metrics_snapshot()
+        assert len(snap.get("dag/ov/shed_t", [])) == 1
+        assert len(snap.get("admission/ov/best_effort/shed_t", [])) == 1
+        # a shed is NOT an error: the controller must not read overload
+        # protection as failure
+        assert "dag/ov/error_t" not in snap
+        assert 2 not in seen                 # shed before any dispatch
+    finally:
+        rt.stop()
+
+
+def test_expired_request_fails_fast_and_never_dispatches():
+    rt = Runtime(n_cpu=2, net=NetModel(scale=0.0), batch_wait_ms=80.0)
+    seen = []
+    try:
+        dep = _sleepy_flow(seen).deploy(rt, name="exp")
+        # the batcher holds its window open for 80ms; a 10ms deadline
+        # passes while the request waits -> expired pre-dispatch
+        fut = rt.call_dag("exp", Table([("i", int)], [(7,)]),
+                          deadline_s=0.01)
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=10)
+        assert 7 not in seen, "expired request reached a dispatch"
+        snap = rt.metrics_snapshot()
+        assert len(snap.get("dag/exp/expired_t", [])) == 1
+        node = next(n for n in dep.dag.nodes.values() if n.batching)
+        assert len(snap.get(
+            f"batch/exp/{node.name}/expired_t", [])) == 1
+        assert "dag/exp/error_t" not in snap
+    finally:
+        rt.stop()
+
+
+def test_deadline_honored_without_admission_controller():
+    """No gate installed: call_dag still enforces an explicit deadline
+    (expiry in the batcher), it just never sheds."""
+    rt = Runtime(n_cpu=2, net=NetModel(scale=0.0), batch_wait_ms=60.0)
+    seen = []
+    try:
+        _sleepy_flow(seen).deploy(rt, name="nd")
+        fut = rt.call_dag("nd", Table([("i", int)], [(3,)]),
+                          deadline_s=0.005)
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=10)
+    finally:
+        rt.stop()
+
+
+# ---------------------------------------------------------------------------
+# the burst: 3x saturating rate, open loop
+# ---------------------------------------------------------------------------
+
+def test_overload_burst_protects_interactive_class():
+    """Open-loop burst at ~3x the deployment's saturating rate.  The
+    gate + deadlines must (a) keep interactive goodput p99 within SLO,
+    (b) never dispatch an expired request, (c) shed with the typed
+    error, (d) reconcile counters: offered == served + shed + expired
+    (+ zero untyped errors)."""
+    from repro.profiling import (BucketStats, FlowProfile, NodeConfig,
+                                 OpLatencyCurve, PlanConfig)
+
+    service_s = 0.01
+    rt = Runtime(n_cpu=2, net=NetModel(scale=0.0), max_batch=4,
+                 batch_wait_ms=2.0)
+    seen = []
+    try:
+        dep = _sleepy_flow(seen, service_s).deploy(rt, name="burst")
+        capacity = 2 / service_s                     # ~200 rows/s
+        # honest curves for the gate's estimator: per-row cost is the
+        # sleep; every op in the plan gets one so the critical path is
+        # modeled end to end
+        curves = {}
+        cfg = PlanConfig(nodes={})
+        for o in dep.plan.ops:
+            c = OpLatencyCurve(key=o.op_id, name=o.op.name,
+                               per_row_s=service_s)
+            for bkt in (1, 2, 4):
+                c.buckets[bkt] = BucketStats(
+                    mean_s=service_s * bkt, p99_s=service_s * bkt * 1.2,
+                    cv=0.05, runs=3, out_bytes=8 * bkt)
+            curves[o.op_id] = c
+            cfg.nodes[o.op_id] = NodeConfig(
+                max_batch=4, batch_wait_ms=2.0, batched_lowering=True,
+                target_replicas=2)
+        slo_s = 0.6
+        adm = AdmissionController(
+            dep.plan, FlowProfile(curves=curves), cfg, net=rt.net,
+            classes={
+                "interactive": ClassPolicy("interactive", priority=2,
+                                           default_deadline_s=slo_s),
+                "best_effort": ClassPolicy(
+                    "best_effort", priority=0,
+                    rate=0.1 * capacity, burst=5,
+                    degrade=DegradePolicy(per_row=True, bucket_cap=4),
+                    default_deadline_s=0.05),
+            })
+        rt.set_admission("burst", adm)
+
+        offered_rate = 3.0 * capacity
+        duration = 1.2
+        lat_lock = threading.Lock()
+        inter_lat, shed_fail_lat = [], []
+        futs = []       # (klass, sent_i, future)
+        i = 0
+        t_start = time.perf_counter()
+        while time.perf_counter() - t_start < duration:
+            klass = "interactive" if i % 5 == 0 else "best_effort"
+            t_send = time.perf_counter()
+            f = rt.call_dag("burst", Table([("i", int)], [(i,)]),
+                            klass=klass)
+
+            def _lat(fut, t0=t_send, k=klass):
+                dt = time.perf_counter() - t0
+                exc = fut.exception()
+                with lat_lock:
+                    if exc is None and k == "interactive":
+                        inter_lat.append(dt)
+                    elif isinstance(exc, Overloaded) \
+                            and not isinstance(exc, DeadlineExceeded):
+                        shed_fail_lat.append(dt)
+            f.add_done_callback(_lat)
+            futs.append((klass, i, f))
+            i += 1
+            # open loop: pace arrivals, never wait on completions
+            next_t = t_start + i / offered_rate
+            pause = next_t - time.perf_counter()
+            if pause > 0:
+                time.sleep(pause)
+
+        outcomes = {"ok": 0, "shed": 0, "expired": 0, "error": 0}
+        expired_ids = []
+        for klass, rid, f in futs:
+            try:
+                f.result(timeout=30)
+                outcomes["ok"] += 1
+            except DeadlineExceeded:
+                outcomes["expired"] += 1
+                expired_ids.append(rid)
+            except Overloaded as e:            # (c) typed shed
+                outcomes["shed"] += 1
+                assert e.klass == "best_effort", \
+                    "interactive traffic must not be shed"
+            except Exception:
+                outcomes["error"] += 1
+
+        offered = len(futs)
+        assert offered > 100                   # the burst actually ran
+        # (d) reconciliation — every request has exactly one outcome,
+        # and the gate's counters agree with the observed outcomes
+        assert sum(outcomes.values()) == offered
+        assert outcomes["error"] == 0, outcomes
+        gate = adm.snapshot()
+        ga = sum(v for k, v in gate.items() if k.endswith("/admitted"))
+        gd = sum(v for k, v in gate.items() if k.endswith("/degraded"))
+        gs = sum(v for k, v in gate.items() if k.endswith("/shed"))
+        go = sum(v for k, v in gate.items() if k.endswith("/offered"))
+        assert go == offered
+        assert ga + gd + gs == go
+        assert gs == outcomes["shed"]
+        assert ga + gd == outcomes["ok"] + outcomes["expired"]
+        # overload actually hit best_effort: a large share shed/degraded
+        assert gs + gd > 0.3 * go, gate
+        # (b) expired requests never reached a dispatch
+        ran = set(seen)
+        for rid in expired_ids:
+            assert rid not in ran, \
+                f"expired request {rid} reached a dispatch"
+        # (a) interactive goodput: most served, and served within SLO
+        n_inter = sum(1 for k, _, _ in futs if k == "interactive")
+        with lat_lock:
+            ilat = sorted(inter_lat)
+            slat = list(shed_fail_lat)
+        assert len(ilat) >= 0.7 * n_inter, \
+            (len(ilat), n_inter, outcomes)
+        p99 = ilat[min(len(ilat) - 1, int(0.99 * len(ilat)))]
+        assert p99 <= slo_s, f"interactive p99 {p99 * 1e3:.0f}ms"
+        # sheds fail FAST: well under the interactive SLO budget
+        if slat:
+            assert max(slat) < 0.1 * slo_s
+        # no batcher wedges: every batcher drains to quiescent
+        deadline = time.perf_counter() + 10.0
+        while time.perf_counter() < deadline:
+            with rt._batchers_lock:
+                bs = list(rt._batchers.values())
+            if all(b.quiescent() for b in bs):
+                break
+            time.sleep(0.02)
+        else:
+            pytest.fail("batcher failed to drain after the burst")
+    finally:
+        rt.stop()

@@ -603,3 +603,195 @@ def test_controller_default_replanner_escalates_swaps_and_confirms():
         assert ev2.kind != "replan"
     finally:
         rt.stop()
+
+
+def _rb1(x: "jax.Array") -> "jax.Array":
+    return x * 3.0
+
+
+def _rb2(x: "jax.Array") -> "jax.Array":
+    return x - 1.0
+
+
+@pytestmark_gpu
+def test_failed_confirm_rolls_back_to_blue_automatically():
+    """Satellite: when the confirm tick after a blue/green swap shows the
+    green generation missing the SLO (here: a rising error rate), the
+    controller rolls back AUTOMATICALLY — blue is re-registered
+    atomically (its generation un-retired), the handle follows, a
+    ``replan/rollback`` metric is recorded, and the cooldown keeps the
+    very next ticks from re-compiling the green that just failed."""
+    from repro.core.lowering import BatchedJittedFuse, JittedFuse
+    from repro.profiling import (BucketStats, FlowProfile, OpLatencyCurve,
+                                 SLOController)
+
+    rt = Runtime(n_cpu=2, n_gpu=1, net=NetModel(scale=0.0),
+                 batch_wait_ms=2.0)
+    try:
+        # a chain signature no other test shares: refresh_profile folds
+        # the process-wide live ChainProfile into the curves, and a chain
+        # already driven per-row at real (fast) speed would overwrite the
+        # synthetic saturated per_row_s below and suppress the escalation
+        fl = Dataflow([("x", jax.Array)])
+        fl.output = fl.map(_rb1, names=["x"], gpu=True, batching=True) \
+            .map(_rb2, names=["x"], gpu=True, batching=True)
+        dep = fl.deploy(rt, fusion=True, batched_lowering=False,
+                        name="rb")
+        blue_dag, blue_plan = dep.dag, dep.plan
+        op_id = next(n for n in dep.dag.nodes.values()
+                     if n.batching).plan_op_id
+        # synthetic curve that forces the batched-flip escalation (same
+        # shape as the escalate-and-confirm test above)
+        c = OpLatencyCurve(key=op_id, name="chain", per_row_s=5e-3)
+        for b in (1, 2, 4, 8, 16):
+            c.buckets[b] = BucketStats(mean_s=1e-3 + 5e-5 * b,
+                                       p99_s=1.5e-3 + 7e-5 * b,
+                                       cv=0.05, runs=3, out_bytes=64 * b)
+        ctl = SLOController(rt, dep, slo_p99_s=0.05,
+                            profile=FlowProfile(curves={op_id: c}),
+                            window_s=1.0, min_rate=1.0,
+                            replan_sample=_sample())
+        for f in [dep.execute(_sample()) for _ in range(60)]:
+            f.result(timeout=30)
+        ev = ctl.tick()
+        assert ev.kind == "replan", ev
+        assert ev.detail.get("replan_report", {}).get("ok") is True
+        assert dep.dag is not blue_dag          # green is live
+
+        # green "fails" in production: malformed requests drive the error
+        # rate past max_error_rate, so the confirm tick judges slo_ok
+        # False even though the modeled latency is fine
+        bad = Table([("x", jax.Array)], [("junk",)])
+        for f in [dep.execute(bad) for _ in range(30)]:
+            with pytest.raises(Exception):
+                f.result(timeout=30)
+        ev2 = ctl.tick()
+        confirm = ev2.detail.get("post_replan_confirm")
+        assert confirm is not None and confirm["slo_ok"] is False, ev2
+        rb = confirm.get("rollback")
+        assert rb and rb["rolled_back"] is True
+        assert rb["restored_generation"] == blue_dag.generation
+        assert ev2.detail.get("rolled_back") is True
+
+        # blue is live again and the shared handle follows the rollback
+        assert rt.dags["rb"] is blue_dag
+        assert dep.dag is blue_dag and dep.plan is blue_plan
+        op0 = dep.plan.op(op_id).op
+        assert isinstance(op0, JittedFuse) \
+            and not isinstance(op0, BatchedJittedFuse)
+        assert "replan/rollback" in rt.metrics_snapshot()
+        # the rollback did NOT re-escalate in the same tick (cooldown)
+        assert "replan_report" not in ev2.detail
+
+        # blue's un-retired generation serves correctly: zero drops
+        out = dep.execute(_sample()).result(timeout=30)
+        np.testing.assert_allclose(
+            np.asarray(out.rows[0].values[0]),
+            np.ones(8, np.float32) * 3 - 1, rtol=1e-6)
+        # inside the cooldown the controller must not re-compile the
+        # green it just rolled back
+        for f in [dep.execute(_sample()) for _ in range(10)]:
+            f.result(timeout=30)
+        ev3 = ctl.tick()
+        assert "replan_report" not in ev3.detail
+    finally:
+        rt.stop()
+
+
+# ---------------------------------------------------------------------------
+# satellite: reserved warm-up/canary executors
+# ---------------------------------------------------------------------------
+
+def _blocked_serving_pool(rt, resource_class="cpu"):
+    """Saturate every SERVING executor of a class with a blocking work
+    item; returns the release event (set it to free the pool)."""
+    release = threading.Event()
+
+    def blocker(tables, ctx):
+        release.wait(30.0)
+        return None
+
+    for ex in rt.pool.by_class(resource_class):
+        from repro.runtime.executor import WorkItem
+        ex.submit(WorkItem(fn=blocker, tables=[], produced_on=[],
+                           callback=lambda *a: None))
+    return release
+
+
+def test_reserved_pool_keeps_canary_off_saturated_serving_pool():
+    """Satellite: with ``reserved_cpu`` provisioned, a blue/green replan
+    completes even while 100% of the serving pool is busy — warm-up and
+    canary traffic for the prepared (not-yet-live) green generation
+    routes to the reserved executors, which serving traffic never
+    touches."""
+    from repro.profiling import BlueGreenReplanner, NodeConfig, PlanConfig
+
+    rt = Runtime(n_cpu=2, net=NetModel(scale=0.0), batch_wait_ms=2.0,
+                 reserved_cpu=1)
+    release = None
+    try:
+        def double(x: int) -> int:
+            return x * 2
+
+        fl = Dataflow([("x", int)])
+        fl.output = fl.map(double, names=["x"], batching=True)
+        dep = fl.deploy(rt, name="rsv")
+        op_id = next(n for n in dep.dag.nodes.values()
+                     if n.batching).plan_op_id
+        # reserved executors are NOT serving candidates
+        assert len(rt.pool.by_class("cpu")) == 2
+        assert len(rt.pool.by_class("cpu", reserved=True)) == 1
+
+        release = _blocked_serving_pool(rt)     # 100% serving-pool load
+        # reference="local": the blue reference request would starve on
+        # the saturated serving pool; ground truth runs inline
+        rep = BlueGreenReplanner(
+            rt, dep, sample=Table([("x", int)], [(3,)]),
+            reference="local", canary_timeout_s=5.0).replan(
+            PlanConfig(nodes={op_id: NodeConfig(max_batch=4,
+                                                batch_wait_ms=1.0)}))
+        assert rep.ok, rep
+        assert rep.canary.get("ok") is True
+        release.set()
+        out = rt.call_dag("rsv", Table([("x", int)], [(5,)])) \
+            .result(timeout=10)
+        assert out.rows[0].values[0] == 10
+    finally:
+        if release is not None:
+            release.set()
+        rt.stop()
+
+
+def test_canary_starves_without_reserved_pool():
+    """Negative control for the reserved-pool satellite: the identical
+    replan under the identical 100% serving-pool load times out in the
+    canary phase when no reserved executors exist — blue stays live."""
+    from repro.profiling import BlueGreenReplanner, NodeConfig, PlanConfig
+
+    rt = Runtime(n_cpu=2, net=NetModel(scale=0.0), batch_wait_ms=2.0)
+    release = None
+    try:
+        def double(x: int) -> int:
+            return x * 2
+
+        fl = Dataflow([("x", int)])
+        fl.output = fl.map(double, names=["x"], batching=True)
+        dep = fl.deploy(rt, name="nrsv")
+        blue_dag = dep.dag
+        op_id = next(n for n in dep.dag.nodes.values()
+                     if n.batching).plan_op_id
+        assert not rt.pool.by_class("cpu", reserved=True)
+
+        release = _blocked_serving_pool(rt)
+        rep = BlueGreenReplanner(
+            rt, dep, sample=Table([("x", int)], [(3,)]),
+            reference="local", canary_timeout_s=1.0).replan(
+            PlanConfig(nodes={op_id: NodeConfig(max_batch=4,
+                                                batch_wait_ms=1.0)}))
+        assert not rep.ok
+        assert rep.phase == "canary"
+        assert rt.dags["nrsv"] is blue_dag      # blue untouched
+    finally:
+        if release is not None:
+            release.set()
+        rt.stop()
