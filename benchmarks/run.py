@@ -30,8 +30,15 @@ through the admission gate — per-class goodput/p50/p99,
 shed/degrade/expiry counts, shed fast-fail p99, expiry-overrun p99, and
 per-point drain + counter-reconciliation integrity bits; at 3x the CI
 gate asserts interactive p99 within SLO, sheds failing in <10% of the
-SLO budget, zero wedged batchers and zero hot-path re-traces) so CI can
-track the perf trajectory across PRs.
+SLO budget, zero wedged batchers and zero hot-path re-traces;
+``faults`` -> ``BENCH_faults.json``: a chaos sweep of crash + straggle +
+transient fault rates over the same chain at half capacity with
+straggler hedging armed — per-point p50/p99, injected-vs-detected fault
+counts, retry/hedge/requeue counters, and integrity bits; CI asserts
+every request resolves TYPED (zero hangs, zero untyped errors), counters
+reconcile, batchers drain, zero hot-path re-traces, low-fault p99 within
+SLO, and no fault-free p50 regression vs the overload 0.5x point) so CI
+can track the perf trajectory across PRs.
 """
 from __future__ import annotations
 
@@ -40,8 +47,8 @@ import sys
 import time
 
 SUITES = ("fusion", "jit_fusion", "competitive", "autoscaling", "locality",
-          "batching", "slo_planner", "replan", "overload", "model_serving",
-          "pipelines", "roofline")
+          "batching", "slo_planner", "replan", "overload", "faults",
+          "model_serving", "pipelines", "roofline")
 
 
 def main() -> None:
@@ -103,6 +110,13 @@ def main() -> None:
             multipliers=(0.5, 3.0) if args.fast
             else (0.5, 1.0, 2.0, 3.0),
             json_path="BENCH_overload.json" if args.json else None))
+    if "faults" in only:
+        from benchmarks import faults
+        emit(faults.run(
+            duration_s=1.5 if args.fast else 2.5,
+            rates=(0.0, 0.02) if args.fast
+            else (0.0, 0.01, 0.02, 0.05),
+            json_path="BENCH_faults.json" if args.json else None))
     if "model_serving" in only:
         from benchmarks import model_serving
         emit(model_serving.run(

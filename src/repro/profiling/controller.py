@@ -163,6 +163,43 @@ class SLOController:
             1 for t in snap.get(f"dag/{name}/request_t", []) if t >= lo)
         return errs / max(1, errs, arrivals)
 
+    #: retries outnumbering successful completions by this factor over
+    #: the window is a retry storm: recovery work has become the load
+    RETRY_STORM_FACTOR = 3.0
+
+    def fault_rate(self,
+                   snapshot: Optional[Dict[str, List[float]]] = None) \
+            -> Dict[str, float]:
+        """Fault-tolerance activity over the recent window, in events per
+        second: executor crashes and wedges (fleet-wide — a dead replica
+        degrades every DAG sharing the pool), plus this DAG's retries and
+        hedges.  Kept SEPARATE from :meth:`error_rate`: a recovered fault
+        is invisible to callers and must not read as a request failure.
+        ``storm`` is True when retries outnumber completions by
+        :data:`RETRY_STORM_FACTOR` — at that point recovery work IS the
+        load, and the deployment counts as missing its SLO."""
+        snap = snapshot if snapshot is not None \
+            else self.runtime.metrics_snapshot()
+        name = self.deployed.dag.name
+        lo = time.perf_counter() - self.window_s
+
+        def count(key: str) -> int:
+            return sum(1 for t in snap.get(key, []) if t >= lo)
+
+        retries = count(f"dag/{name}/retry_t")
+        # successful completions carry a latency sample, not a timestamp;
+        # window-total approximated by arrivals, as in error_rate
+        completions = count(f"dag/{name}/request_t")
+        w = max(self.window_s, 1e-9)
+        return {"crash_rate": count("faults/crash_t") / w,
+                "wedge_rate": count("faults/wedge_t") / w,
+                "requeue_rate": count("faults/requeued_t") / w,
+                "retry_rate": retries / w,
+                "hedge_rate": count(f"dag/{name}/hedge_t") / w,
+                "storm": float(
+                    retries > self.RETRY_STORM_FACTOR
+                    * max(1, completions))}
+
     def protection_rates(self,
                          snapshot: Optional[Dict[str, List[float]]] = None) \
             -> Dict[str, float]:
@@ -254,8 +291,16 @@ class SLOController:
         # p99 improves exactly when the system degrades
         err_rate = self.error_rate(snap)
         detail["error_rate"] = err_rate
+        # fault-tolerance activity rides next to the error rate: crashes
+        # and hedged stragglers that RECOVERED don't show up in error_t,
+        # but a retry storm (recovery work exceeding completions) means
+        # the deployment is burning capacity re-executing — an SLO miss
+        # even while callers still get answers
+        fault = self.fault_rate(snap)
+        detail["fault"] = fault
         slo_ok = cur_pred.meets(self.slo_p99_s) \
-            and err_rate <= self.max_error_rate
+            and err_rate <= self.max_error_rate \
+            and not fault["storm"]
         detail["slo_ok"] = slo_ok
         # overload protection activity: shed/expired/degraded decisions
         # ride their own metric series, so the controller can tell

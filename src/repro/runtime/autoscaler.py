@@ -112,6 +112,19 @@ class Autoscaler:
         while not self._stop:
             snapshot = {}
             for fname, rclass in self.functions.items():
+                # failed-replica floor: replica_count counts HEALTHY
+                # executors, so a crashed/wedged worker shows up here as a
+                # shortfall — replace it even when the queue is empty (a
+                # dead replica with no backlog would otherwise never
+                # trigger the depth heuristic, and the next burst would
+                # land on a short fleet).  Only for functions that HAVE an
+                # assignment: creating a first one would narrow
+                # candidates() away from the pool-wide default executors.
+                if fname in self.pool.assignment:
+                    n0 = self.pool.replica_count(fname)
+                    while n0 < self.cfg.min_replicas:
+                        self.pool.add_replica(fname, rclass)
+                        n0 += 1
                 n = max(1, self.pool.replica_count(fname))
                 target = self.target(fname)
                 if target is not None:

@@ -16,12 +16,20 @@ from repro.runtime.netmodel import NetModel, nbytes
 
 
 class KVS:
+    #: retention bound for the applied-write journal (put_once keys)
+    APPLIED_CAP = 65536
+
     def __init__(self, net: Optional[NetModel] = None):
         self.net = net or NetModel()
         self._data: Dict[str, Any] = {}
         self._lock = threading.Lock()
         # which executor caches (likely) hold each key — the scheduler's index
         self._cache_index: Dict[str, Set[str]] = collections.defaultdict(set)
+        # idempotence journal: tokens of writes already applied, so an
+        # at-least-once redispatch (crash requeue, straggler hedge)
+        # re-running an operator cannot double-apply its writes
+        self._applied: "collections.OrderedDict[Any, None]" = \
+            collections.OrderedDict()
         self.stats = collections.Counter()
 
     def put(self, key: str, value: Any, *, charge: bool = True):
@@ -30,6 +38,22 @@ class KVS:
         with self._lock:
             self._data[key] = value
             self.stats["puts"] += 1
+
+    def put_once(self, token: Any, key: str, value: Any, *,
+                 charge: bool = True) -> bool:
+        """Apply a write exactly once per ``token`` (the dispatch key of
+        the executing work item + the KVS key).  Returns False — and
+        applies nothing, charges nothing — when the token was already
+        applied by another execution attempt of the same logical item."""
+        with self._lock:
+            if token in self._applied:
+                self.stats["dedup_puts"] += 1
+                return False
+            self._applied[token] = None
+            while len(self._applied) > self.APPLIED_CAP:
+                self._applied.popitem(last=False)
+        self.put(key, value, charge=charge)
+        return True
 
     def get(self, key: str, *, charge: bool = True) -> Any:
         with self._lock:
@@ -86,6 +110,12 @@ class CacheClient:
     def put(self, key: str, value: Any):
         """Write-through."""
         self.kvs.put(key, value)
+        self._insert(key, value)
+
+    def observe(self, key: str, value: Any):
+        """Populate the local cache WITHOUT writing through — used after
+        an idempotent ``KVS.put_once`` already applied (or deduplicated)
+        the durable write, so this executor still serves reads locally."""
         self._insert(key, value)
 
     def _insert(self, key: str, value: Any):

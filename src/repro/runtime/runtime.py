@@ -27,6 +27,8 @@ from repro.runtime.netmodel import NetModel
 from repro.serving.admission import (AdmissionController, DeadlineExceeded,
                                      Overloaded)
 from repro.serving.batcher import Batcher
+from repro.serving.faults import FaultInjector, FaultPlan
+from repro.serving.retry import CompletionToken, ExecutorLost, RetryPolicy
 
 _req_ids = itertools.count()
 
@@ -39,6 +41,9 @@ class RequestContext:
     deadline_t: Optional[float] = None    # absolute perf_counter deadline
     deadline_s: Optional[float] = None    # the caller's relative budget
     degrade: Optional[DegradePolicy] = None   # set when admitted degraded
+    # idempotence: per-request id, part of every dispatched item's
+    # ``dispatch_key`` so at-least-once redispatch can't double-apply
+    req_id: Optional[int] = None
 
 
 class Runtime:
@@ -47,13 +52,37 @@ class Runtime:
                  cache_bytes: int = 2 << 30,
                  max_batch: int = 10, batch_wait_ms: float = 2.0,
                  seed: int = 0,
-                 reserved_cpu: int = 0, reserved_gpu: int = 0):
+                 reserved_cpu: int = 0, reserved_gpu: int = 0,
+                 fault_plan: Optional[FaultPlan] = None,
+                 hang_timeout_s: float = 5.0,
+                 detector_interval_s: float = 0.05,
+                 auto_replace: bool = True,
+                 retry_policies: Optional[Dict[str, RetryPolicy]] = None):
         self.net = net or NetModel()
         self.kvs = KVS(self.net)
+        injector = FaultInjector(fault_plan) if fault_plan is not None \
+            else None
         self.pool = ExecutorPool(self.kvs, self.net, n_cpu=n_cpu, n_gpu=n_gpu,
                                  cache_bytes=cache_bytes,
                                  reserved_cpu=reserved_cpu,
-                                 reserved_gpu=reserved_gpu)
+                                 reserved_gpu=reserved_gpu,
+                                 fault_injector=injector,
+                                 hang_timeout_s=hang_timeout_s,
+                                 auto_replace=auto_replace,
+                                 on_fault=self._on_fault)
+        # heartbeat failure detector: always on — a crashed or wedged
+        # executor must never strand in-flight items, fault plan or not
+        self.pool.start_failure_detector(interval_s=detector_interval_s)
+        # per-class transient-retry policies ("default" backs all classes
+        # without an explicit entry); deadline-budget-aware backoff
+        self._retry_policies: Dict[str, RetryPolicy] = \
+            dict(retry_policies) if retry_policies else {}
+        self._retry_policies.setdefault("default", RetryPolicy())
+        self._retry_rng = random.Random(seed ^ 0x5EED)
+        # straggler hedging: (dag name, node name) -> hedge delay seconds
+        # (profile-derived via serving.faults.install_hedging, or set
+        # directly with configure_hedging); absent = hedging off
+        self._hedge_delays: Dict[Tuple[str, str], float] = {}
         # per-dag admission gates (set_admission); None = accept everything
         self._admission: Dict[str, AdmissionController] = {}
         self.dags: Dict[str, RuntimeDag] = {}
@@ -272,17 +301,35 @@ class Runtime:
         # cross-device copy) the residency analysis eliminated, and would
         # invalidate buffer donation
         ex = None
+        pinned = False
         for t, src in zip(tables, produced_on):
             if isinstance(t, DeviceTable) and src is not None:
                 ex = self.pool.by_id(src)
+                pinned = ex is not None
                 break
         if ex is None:
             ex = self.pick_executor(node, locality_key,
                                     prefer_reserved=self._is_prepared(dag))
-        ex.submit(WorkItem(fn=node.fn, tables=tables,
-                           produced_on=produced_on, callback=callback,
-                           deadline_t=ctx.deadline_t if ctx else None,
-                           degrade=ctx.degrade if ctx else None))
+        key = None
+        if ctx is not None and ctx.req_id is not None:
+            key = (ctx.req_id, node.name)
+        item = WorkItem(fn=node.fn, tables=tables,
+                        produced_on=produced_on, callback=callback,
+                        deadline_t=ctx.deadline_t if ctx else None,
+                        degrade=ctx.degrade if ctx else None,
+                        dispatch_key=key)
+        if pinned:
+            # pinned to the producer's device: redispatching elsewhere
+            # would lose the resident buffers, so no retry/hedge — the
+            # failure detector still recovers the item if the pinned
+            # worker dies (the requeued run re-materializes on host)
+            try:
+                ex.submit(item)
+            except RuntimeError as e:
+                item.deliver(None, ExecutorLost(str(e)), None)
+            return
+        self._submit_resilient(node, ex, item, ctx,
+                               dag_name=dag.name if dag is not None else "")
 
     #: per-series retention: enough history for any rate/percentile window
     #: the controller uses, while keeping snapshot cost and memory constant
@@ -301,6 +348,133 @@ class Runtime:
         this while executor callbacks keep appending)."""
         with self._metrics_lock:
             return {k: list(v) for k, v in self.metrics.items()}
+
+    # -- fault tolerance ------------------------------------------------------
+    def _on_fault(self, kind: str, executor_id: str, n_requeued: int):
+        """Failure-detector hook: surface crash/wedge events and requeue
+        volume as metric series (timestamps, like every *_t series) the
+        SLO controller folds into ``fault_rate`` — kept SEPARATE from
+        ``error_t``: a recovered fault is not a request failure."""
+        now = time.perf_counter()
+        self.record_metric(f"faults/{kind}_t", now)
+        for _ in range(n_requeued):
+            self.record_metric("faults/requeued_t", now)
+
+    def set_fault_plan(self, plan: Optional[FaultPlan]) -> \
+            Optional[FaultInjector]:
+        """Install (or clear, with None) a fault-injection plan on every
+        executor — the chaos benchmark sweeps rates this way.  Returns
+        the live injector so callers can read its counts."""
+        injector = FaultInjector(plan) if plan is not None else None
+        self.pool.set_injector(injector)
+        return injector
+
+    def configure_hedging(self, dag_name: str, node_name: str,
+                          delay_s: Optional[float]) -> None:
+        """Set (or clear, with None) a node's straggler-hedge delay: once
+        a dispatch has been out this long with no result, a backup copy
+        is raced on another replica, first-result-wins.  Derive delays
+        from measured curves with ``serving.faults.install_hedging``."""
+        if delay_s is None:
+            self._hedge_delays.pop((dag_name, node_name), None)
+        else:
+            self._hedge_delays[(dag_name, node_name)] = float(delay_s)
+
+    def _submit_resilient(self, node: RuntimeNode, target, item: WorkItem,
+                          ctx: Optional[RequestContext],
+                          dag_name: str = "") -> None:
+        """Submit with the fault-tolerance wrapper:
+
+        * **completion token** — every attempt (original, crash requeue,
+          hedge, retry) of the logical item delivers at most once;
+        * **transient retries** — a typed transient failure redispatches
+          to another replica with capped jittered backoff, never past the
+          request's deadline budget;
+        * **straggler hedging** — if a hedge delay is configured for this
+          node (profile-derived p99), a backup dispatch races the primary
+          after that delay; the loser is cancelled by the token.  Hedges
+          are announced to the admission gate as offered load and are
+          suppressed when the gate sees no headroom, so hedging cannot
+          amplify an overload.  Nodes in a competitive group are never
+          hedged — competitive execution already races replicas.
+        """
+        klass = ctx.klass if ctx is not None else "interactive"
+        deadline_s = ctx.deadline_s if ctx is not None else None
+        policy = self._retry_policies.get(
+            klass, self._retry_policies["default"])
+        hedge_delay = self._hedge_delays.get((dag_name, node.name))
+        if node.competitive_group is not None:
+            hedge_delay = None
+        final_cb = item.callback
+
+        def attempt_submit(work: WorkItem, ex) -> None:
+            timers: List[threading.Timer] = []
+
+            def guard(result, error, exec_id):
+                for t in timers:
+                    t.cancel()
+                if error is not None:
+                    delay = policy.next_delay(
+                        work.attempt, error, time.perf_counter(),
+                        deadline_t=work.deadline_t, rng=self._retry_rng)
+                    if delay is not None:
+                        if dag_name:
+                            self.record_metric(f"dag/{dag_name}/retry_t",
+                                               time.perf_counter())
+                        nxt = work.clone()
+                        nxt.token = CompletionToken()
+                        nxt.attempt = work.attempt + 1
+
+                        def fire_retry():
+                            try:
+                                t2 = self.pick_executor(node)
+                                attempt_submit(nxt, t2)
+                            except BaseException as e:
+                                if nxt.token.claim(None):
+                                    final_cb(None, e, None)
+                        rt_t = threading.Timer(delay, fire_retry)
+                        rt_t.daemon = True
+                        rt_t.start()
+                        return
+                final_cb(result, error, exec_id)
+
+            work.callback = guard
+            if hedge_delay is not None:
+                def fire_hedge():
+                    if work.token.claimed:
+                        return
+                    adm = self._admission.get(dag_name)
+                    if adm is not None and not adm.note_hedge(
+                            klass, deadline_s=deadline_s):
+                        # no headroom: a hedge now would amplify the
+                        # overload the gate is defusing
+                        return
+                    others = [e for e in self.pool.candidates(
+                                  node.name, node.resource_class)
+                              if e.id != ex.id]
+                    if not others:
+                        return
+                    if dag_name:
+                        self.record_metric(f"dag/{dag_name}/hedge_t",
+                                           time.perf_counter())
+                    try:
+                        # shared token: first result wins, loser cancelled
+                        min(others, key=lambda e: e.load).submit(
+                            work.clone())
+                    except RuntimeError:
+                        pass
+                hg_t = threading.Timer(hedge_delay, fire_hedge)
+                hg_t.daemon = True
+                timers.append(hg_t)
+                hg_t.start()
+            try:
+                ex.submit(work)
+            except RuntimeError as e:
+                # stopped between pick and submit: count it as a
+                # transient executor loss so the retry path re-picks
+                work.deliver(None, ExecutorLost(str(e)), None)
+
+        attempt_submit(item, target)
 
     # -- online reconfiguration (SLO controller hot-apply) --------------------
     def batcher_for(self, dag_name: str, node_name: str,
@@ -454,8 +628,13 @@ class Runtime:
             batch_deadline = (max(deadlines)
                               if deadlines and None not in deadlines
                               else None)
+            # the merged batch is one logical item: its dispatch_key makes
+            # KVS writes idempotent and its token makes demux exactly-once
+            # across crash requeues / hedges of the whole batch
             item = WorkItem(fn=fn, tables=[big], produced_on=[None],
-                            callback=None, deadline_t=batch_deadline)
+                            callback=None, deadline_t=batch_deadline,
+                            dispatch_key=(dag_name, node.name,
+                                          next(_req_ids)))
 
             # metric series are keyed by (dag, node) so two DAGs sharing a
             # node name don't interleave their histograms (generations of
@@ -546,7 +725,12 @@ class Runtime:
                             pass
 
             item.callback = demux
-            ex.submit(item)
+            # retry/hedge budget from any member context (members of a
+            # merged batch share the node's class and similar deadlines)
+            ctx0 = next((c for _, _, _, _, c in live if c is not None),
+                        None)
+            self._submit_resilient(node, ex, item, ctx0,
+                                   dag_name=dag_name)
             return [None] * len(arg_list)
 
         return batched
@@ -561,6 +745,12 @@ class Runtime:
         if admission is None:
             self._admission.pop(dag_name, None)
         else:
+            if admission.queue_depth_fn is None:
+                # leading overload indicator: executor backlog moves ahead
+                # of the arrival-rate estimate during a burst or after a
+                # replica failure shrinks effective capacity
+                admission.queue_depth_fn = \
+                    lambda: self.pool.total_depth()
             self._admission[dag_name] = admission
 
     def admission_for(self, dag_name: str) -> Optional[AdmissionController]:
@@ -618,6 +808,12 @@ class Runtime:
         ``dag/<name>/…`` series the SLO controller measures."""
         fut: Future = Future()
         t0 = time.perf_counter()
+        # every request gets a context with a unique id: (req_id, node)
+        # is the dispatch key that makes redispatched KVS writes
+        # idempotent and completions exactly-once
+        if ctx is None:
+            ctx = RequestContext()
+        ctx.req_id = next(_req_ids)
         if record:
             name = dag.name
             # arrival + end-to-end latency series: what the SLO
@@ -756,9 +952,17 @@ class _DagExecution:
                         locality_key = t.rows[0].values[idx]
                 except KeyError:
                     pass
-            self.rt.dispatch(node, tables, srcs,
-                             self._make_callback(node), locality_key,
-                             dag=self.dag, ctx=self.ctx)
+            try:
+                self.rt.dispatch(node, tables, srcs,
+                                 self._make_callback(node), locality_key,
+                                 dag=self.dag, ctx=self.ctx)
+            except BaseException as e:
+                # a dispatch that cannot even start (e.g. every replica of
+                # the class unhealthy) must still resolve the caller —
+                # a hung Future is the one outcome fault tolerance forbids
+                if not self.fut.done():
+                    self.fut.set_exception(e)
+                return
 
     def _make_callback(self, node: RuntimeNode):
         def cb(result, error, exec_id):

@@ -1,22 +1,39 @@
-"""Serving-layer building blocks: request batching and overload
-protection (admission control, request classes, deadlines).
+"""Serving-layer building blocks: request batching, overload protection
+(admission control, request classes, deadlines), and fault tolerance
+(typed retries, fault injection, straggler hedging).
 
 * :mod:`repro.serving.batcher` — deadline-aware micro-batching
   (``Batcher``): adaptive coalescing windows, earliest-deadline-first
   backlog ordering, pre-dispatch expiry;
 * :mod:`repro.serving.admission` — the front-door gate
   (``AdmissionController``): per-class token buckets plus a
-  priority-ordered M/M/c estimator check, typed ``Overloaded`` /
-  ``DeadlineExceeded`` fast-fail errors, and ``DegradePolicy``-based
-  degraded serving for low-priority traffic.
+  priority-ordered M/M/c estimator check blended with live executor
+  queue depth, typed ``Overloaded`` / ``DeadlineExceeded`` fast-fail
+  errors, and ``DegradePolicy``-based degraded serving for low-priority
+  traffic;
+* :mod:`repro.serving.retry` — the ``Transient`` / ``Permanent`` error
+  taxonomy, deadline-budget-aware ``RetryPolicy`` backoff, and the
+  ``CompletionToken`` exactly-once-delivery primitive for at-least-once
+  redispatch;
+* :mod:`repro.serving.faults` — seeded deterministic fault injection
+  (``FaultPlan`` / ``FaultInjector``: crash, hang, transient) and
+  profile-derived straggler-hedge delays (``install_hedging``).
 """
 from repro.serving.admission import (AdmissionController, ClassPolicy,
                                      DeadlineExceeded, Decision, Overloaded,
                                      TokenBucket, default_classes)
 from repro.serving.batcher import Batcher, BatchItem
+from repro.serving.faults import (FaultInjector, FaultPlan, FaultSpec,
+                                  hedge_delays_from_profile, install_hedging)
+from repro.serving.retry import (CompletionToken, ExecutorLost, Permanent,
+                                 RetryPolicy, Transient, TransientFault,
+                                 is_transient)
 
 __all__ = [
     "AdmissionController", "Batcher", "BatchItem", "ClassPolicy",
-    "DeadlineExceeded", "Decision", "Overloaded", "TokenBucket",
-    "default_classes",
+    "CompletionToken", "DeadlineExceeded", "Decision", "ExecutorLost",
+    "FaultInjector", "FaultPlan", "FaultSpec", "Overloaded", "Permanent",
+    "RetryPolicy", "TokenBucket", "Transient", "TransientFault",
+    "default_classes", "hedge_delays_from_profile", "install_hedging",
+    "is_transient",
 ]

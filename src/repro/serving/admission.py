@@ -151,7 +151,8 @@ class AdmissionController:
     def __init__(self, plan=None, profile=None, config=None, *, net=None,
                  classes: Optional[Dict[str, ClassPolicy]] = None,
                  window_s: float = 1.0, reestimate_s: float = 0.25,
-                 default_klass: str = "interactive"):
+                 default_klass: str = "interactive",
+                 queue_depth_fn=None, queue_cost_s: float = 0.0):
         self.plan = plan
         self.profile = profile
         self.config = config
@@ -160,6 +161,14 @@ class AdmissionController:
         self.window_s = float(window_s)
         self.reestimate_s = float(reestimate_s)
         self.default_klass = default_klass
+        # leading overload indicator: live executor backlog.  The M/M/c
+        # estimate is a steady-state model fed by a windowed arrival rate,
+        # so it lags a burst (and a replica failure that shrinks capacity)
+        # by up to window_s; the queue it leaves behind is visible NOW.
+        # queue_cost_s is the modeled per-queued-item drain cost — when
+        # 0 it is derived from the profile's bottleneck service time.
+        self.queue_depth_fn = queue_depth_fn
+        self.queue_cost_s = float(queue_cost_s)
         self._lock = threading.Lock()
         self._buckets: Dict[str, TokenBucket] = {}
         for name, pol in self.classes.items():
@@ -183,6 +192,7 @@ class AdmissionController:
             if config is not None:
                 self.config = config
             self._est_cache.clear()
+            self._btl_cost = None
 
     def set_class(self, policy: ClassPolicy) -> None:
         with self._lock:
@@ -246,6 +256,53 @@ class AdmissionController:
         return est.estimate(self.plan, cfg,
                             Workload(arrival_rate=max(lam, 1e-6))).p99_s
 
+    def _queue_penalty(self, now: float) -> float:
+        """Extra expected wait implied by the backlog already sitting in
+        executor queues: depth × per-item drain cost at the bottleneck.
+        Computed OUTSIDE the estimate cache — the backlog moves faster
+        than ``reestimate_s`` during exactly the events (bursts, replica
+        failures) this signal exists to catch."""
+        fn = self.queue_depth_fn
+        if fn is None:
+            return 0.0
+        try:
+            depth = int(fn())
+        except BaseException:
+            return 0.0
+        if depth <= 0:
+            return 0.0
+        cost = self.queue_cost_s
+        if cost <= 0.0:
+            cost = self._bottleneck_cost_s()
+        return depth * cost
+
+    def _bottleneck_cost_s(self) -> float:
+        """Per-queued-item drain cost: the slowest op's mean service time
+        divided by its replica count (the pool drains the backlog at the
+        bottleneck's aggregate rate).  Cached — the plan only changes via
+        ``update``, which clears it."""
+        cached = getattr(self, "_btl_cost", None)
+        if cached is not None:
+            return cached
+        cost = 1e-3              # permissive floor with nothing to model
+        if self.plan is not None and self.profile is not None:
+            cfg = self.config if self.config is not None \
+                else _DEFAULT_CONFIG
+            worst = 0.0
+            for o in getattr(self.plan, "ops", ()):
+                curve = self.profile.curves.get(o.op_id)
+                if curve is None:
+                    continue
+                nc = cfg.node(o.op_id)
+                c = max(1, int(getattr(nc, "target_replicas", 1) or 1))
+                b = max(1, int(getattr(nc, "max_batch", 1) or 1))
+                per_item = curve.service_s(b) / (b * c)
+                worst = max(worst, per_item)
+            if worst > 0.0:
+                cost = worst
+        self._btl_cost = cost
+        return cost
+
     # -- the gate ------------------------------------------------------------
     def admit(self, klass: Optional[str] = None,
               deadline_s: Optional[float] = None) -> Decision:
@@ -267,20 +324,51 @@ class AdmissionController:
             est = None
             if deadline_s is not None:
                 lam = self.rate_at_or_above(pol.priority, now)
-                est = self._p99_at(pol.priority, lam, now)
+                penalty = self._queue_penalty(now)
+                est = self._p99_at(pol.priority, lam, now) + penalty
                 if est > deadline_s:
+                    reason = ("queue_depth"
+                              if penalty > 0.0
+                              and est - penalty <= deadline_s
+                              else "deadline_risk")
                     if pol.degrade is not None:
                         self.counters[f"{name}/degraded"] += 1
-                        return Decision("degrade", name, "deadline_risk",
+                        return Decision("degrade", name, reason,
                                         estimate_s=est,
                                         deadline_s=deadline_s,
                                         degrade=pol.degrade)
                     self.counters[f"{name}/shed"] += 1
-                    return Decision("shed", name, "deadline_risk",
+                    return Decision("shed", name, reason,
                                     estimate_s=est, deadline_s=deadline_s)
             self.counters[f"{name}/admitted"] += 1
             return Decision("admit", name, "ok", estimate_s=est,
                             deadline_s=deadline_s)
+
+    def note_hedge(self, klass: Optional[str] = None,
+                   deadline_s: Optional[float] = None) -> bool:
+        """A straggler hedge is OFFERED LOAD: it occupies a replica like
+        any request.  The runtime announces each would-be hedge here; the
+        gate counts it into the class's arrival window and answers
+        whether there is headroom for it.  False suppresses the hedge —
+        under overload a backup dispatch only amplifies the queue the
+        primary is already stuck in."""
+        now = time.perf_counter()
+        pol = self.policy(klass)
+        name = pol.name
+        with self._lock:
+            self.counters[f"{name}/hedge_offered"] += 1
+            self._note_arrival(name, now)
+            if deadline_s is None:
+                deadline_s = pol.default_deadline_s
+            if deadline_s is not None:
+                lam = self.rate_at_or_above(pol.priority, now)
+                est = self._p99_at(pol.priority, lam, now) \
+                    + self._queue_penalty(now)
+                if est > deadline_s:
+                    self.counters[f"{name}/hedge_suppressed"] += 1
+                    return False
+            self.counters[f"{name}/hedge_admitted"] += 1
+            return True
 
     def snapshot(self) -> Dict[str, int]:
         with self._lock:

@@ -133,6 +133,14 @@ class Batcher:
             self.q.put(item)
         return item
 
+    def pending(self) -> int:
+        """Live requests in this batcher: accepted and not yet completed
+        (queued, mid-flush, or dispatched awaiting their callback).  The
+        counter the accountancy tests reconcile against offered traffic —
+        it must return to zero after every fault-recovery path."""
+        with self._lock:
+            return self._pending
+
     def quiescent(self) -> bool:
         """True when the batcher holds NO live requests: nothing queued
         *and* no flush in progress.  This is the drain signal retirement

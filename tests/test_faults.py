@@ -1,0 +1,548 @@
+"""Fault-tolerant execution: injection, detection, retries, hedging.
+
+* seeded :class:`FaultPlan` injection is deterministic per executor —
+  the same seed replays the same fault schedule;
+* an executor crash mid-item is detected, its queued + in-flight work is
+  requeued onto healthy replicas, the replica is replaced, and every
+  caller still gets a typed answer (zero hangs);
+* a crash during a blue/green swap finishes the in-flight requests on
+  blue with zero drops, and blue still drains + retires;
+* transient retries respect the request's deadline budget — a backoff
+  that would land past the deadline is not taken;
+* straggler hedging: the backup dispatch wins, the straggling loser is
+  cancelled by the completion token (exactly-once delivery, no double
+  execution of user code);
+* at-least-once redispatch cannot double-apply KVS writes
+  (``put_once``) or double-fire callbacks (``CompletionToken``);
+* regression: ``ExecutorPool.remove_replica`` used to silently drop the
+  removed worker's queued items — they are requeued now;
+* the admission gate blends live executor queue depth into its
+  deadline-risk estimate, and counts hedges as offered load;
+* the SLO controller surfaces ``fault_rate`` next to ``error_rate``, and
+  a retry storm counts as an SLO miss.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core.dataflow import Dataflow
+from repro.core.table import Table
+from repro.profiling import FlowProfile, SLOController
+from repro.runtime.autoscaler import Autoscaler, AutoscalerConfig
+from repro.runtime.executor import ExecutorPool, WorkItem
+from repro.runtime.kvs import KVS
+from repro.runtime.netmodel import NetModel
+from repro.runtime.runtime import Runtime
+from repro.serving.admission import AdmissionController, ClassPolicy, \
+    Overloaded
+from repro.serving.faults import FaultInjector, FaultPlan
+from repro.serving.retry import (CompletionToken, ExecutorLost, Permanent,
+                                 RetryPolicy, Transient, TransientFault,
+                                 is_transient)
+
+
+def _flow(seen=None, service_s=0.0, batching=False):
+    def fn(i: int) -> int:
+        if seen is not None:
+            seen.append(i)
+        if service_s:
+            time.sleep(service_s)
+        return i + 1
+
+    fl = Dataflow([("i", int)])
+    fl.output = fl.map(fn, names=["i"], batching=batching)
+    return fl
+
+
+def _t(i=1):
+    return Table([("i", int)], [(i,)])
+
+
+# ---------------------------------------------------------------------------
+# taxonomy + retry policy (unit)
+# ---------------------------------------------------------------------------
+
+def test_error_taxonomy():
+    assert is_transient(TransientFault("x"))
+    assert is_transient(ExecutorLost("x"))
+    assert is_transient(ConnectionError("x"))
+    assert not is_transient(Permanent("x"))
+    assert not is_transient(ValueError("x"))     # unknown = permanent
+    # a Permanent subclass of Transient stays permanent (checked first)
+    class Both(Transient, Permanent):
+        pass
+    assert not is_transient(Both("x"))
+
+
+def test_retry_policy_respects_deadline_budget():
+    pol = RetryPolicy(max_attempts=5, base_s=0.010, multiplier=1.0,
+                      cap_s=0.010, jitter=0.0)
+    now = 100.0
+    err = TransientFault("x")
+    # plenty of budget: retry
+    assert pol.next_delay(0, err, now, deadline_t=now + 1.0) == \
+        pytest.approx(0.010)
+    # backoff would land past the deadline: delivered instead
+    assert pol.next_delay(0, err, now, deadline_t=now + 0.005) is None
+    # attempts exhausted
+    assert pol.next_delay(4, err, now, deadline_t=now + 1.0) is None
+    # permanent errors never retry
+    assert pol.next_delay(0, ValueError("x"), now,
+                          deadline_t=now + 1.0) is None
+
+
+def test_completion_token_claims_exactly_once():
+    tok = CompletionToken()
+    results = [tok.claim(f"e{i}") for i in range(5)]
+    assert results.count(True) == 1
+    assert tok.claimed and tok.winner == "e0"
+
+
+# ---------------------------------------------------------------------------
+# injection determinism (unit)
+# ---------------------------------------------------------------------------
+
+def test_fault_injection_is_deterministic_per_executor():
+    plan = FaultPlan(seed=42).crash(rate=0.3).transient(rate=0.2)
+
+    def schedule(executor_id):
+        inj = FaultInjector(FaultPlan(
+            specs=list(plan.specs), seed=plan.seed))
+        out = []
+        for _ in range(200):
+            f = inj.draw(executor_id, "cpu")
+            out.append(f.kind if f is not None else None)
+        return out
+
+    a, b = schedule("cpu-exec-0"), schedule("cpu-exec-0")
+    assert a == b
+    assert any(k == "crash" for k in a)
+    assert any(k == "transient" for k in a)
+    # a different executor id sees a DIFFERENT (but also deterministic)
+    # sequence: per-executor seeding, independent of interleaving
+    assert schedule("cpu-exec-1") != a
+
+
+def test_fault_spec_limit_and_classes():
+    plan = FaultPlan(seed=0).crash(rate=1.0, limit=2, classes=["gpu"])
+    inj = FaultInjector(plan)
+    assert inj.draw("e0", "cpu") is None          # wrong class
+    assert inj.draw("e0", "gpu").kind == "crash"
+    assert inj.draw("e0", "gpu").kind == "crash"
+    assert inj.draw("e0", "gpu") is None          # limit exhausted
+    assert inj.snapshot() == {"crash": 2, "hang": 0, "transient": 0}
+
+
+# ---------------------------------------------------------------------------
+# crash detection + recovery (integration)
+# ---------------------------------------------------------------------------
+
+def test_crash_is_detected_requeued_and_replaced():
+    rt = Runtime(n_cpu=3, net=NetModel(scale=0.0),
+                 detector_interval_s=0.02)
+    try:
+        fl = _flow()
+        fl.deploy(rt, name="f")
+        assert fl.execute(_t()).result(timeout=10).rows[0].values[0] == 2
+        n0 = len(rt.pool.executors)
+        rt.set_fault_plan(FaultPlan(seed=1).crash(rate=1.0, limit=1))
+        # the crashed attempt is requeued; the caller never notices
+        assert fl.execute(_t(5)).result(timeout=10).rows[0].values[0] == 6
+        rt.set_fault_plan(None)
+        assert rt.pool.fault_counts["crash"] == 1
+        assert rt.pool.fault_counts["requeued"] >= 1
+        assert rt.pool.fault_counts["replaced"] == 1
+        # dead replica excluded, replacement added: pool size restored
+        healthy = [e for e in rt.pool.executors.values() if e.healthy]
+        assert len(healthy) == n0
+        snap = rt.metrics_snapshot()
+        assert len(snap.get("faults/crash_t", [])) == 1
+        # a RECOVERED crash is not a request error
+        assert "dag/f/error_t" not in snap
+    finally:
+        rt.stop()
+
+
+def test_wedged_executor_fails_over_in_flight_item():
+    rt = Runtime(n_cpu=2, net=NetModel(scale=0.0), hang_timeout_s=0.15,
+                 detector_interval_s=0.02)
+    try:
+        fl = _flow()
+        fl.deploy(rt, name="w")
+        assert fl.execute(_t()).result(timeout=10).rows[0].values[0] == 2
+        # straggle well past the wedge timeout: the detector clones the
+        # in-flight item onto a healthy replica
+        rt.set_fault_plan(FaultPlan(seed=7).hang(rate=1.0, hang_s=2.0,
+                                                 limit=1))
+        t0 = time.perf_counter()
+        assert fl.execute(_t(3)).result(timeout=10).rows[0].values[0] == 4
+        assert time.perf_counter() - t0 < 1.5   # did not wait out the hang
+        rt.set_fault_plan(None)
+        assert rt.pool.fault_counts["wedge"] == 1
+        assert len(rt.metrics_snapshot().get("faults/wedge_t", [])) == 1
+    finally:
+        rt.stop()
+
+
+def test_no_healthy_replica_fails_typed_never_hangs():
+    pool = ExecutorPool(KVS(), NetModel(scale=0.0), n_cpu=1)
+    try:
+        errors = []
+        item = WorkItem(fn=lambda tables, ctx: tables[0],
+                        tables=[_t()], produced_on=[None],
+                        callback=lambda r, e, x: errors.append(e))
+        # the ONLY replica is excluded: requeue must fail the item typed
+        only = next(iter(pool.executors.values()))
+        n = pool.requeue([item], "cpu", exclude={only.id})
+        assert n == 0
+        assert len(errors) == 1 and isinstance(errors[0], ExecutorLost)
+        assert pool.fault_counts["lost"] == 1
+    finally:
+        pool.stop()
+
+
+def test_autoscaler_replaces_failed_replica_below_min():
+    pool = ExecutorPool(KVS(), NetModel(scale=0.0), n_cpu=2,
+                        auto_replace=False)
+    try:
+        ids = list(pool.executors)
+        pool.assign("f", ids)
+        asc = Autoscaler(pool, {"f": "cpu"},
+                         AutoscalerConfig(interval_s=0.02, min_replicas=2))
+        asc.start()
+        try:
+            # fail one replica by hand (auto_replace off: replacement is
+            # the autoscaler's job here)
+            pool._handle_failure(pool.executors[ids[0]], "crash")
+            assert pool.replica_count("f") == 1
+            deadline = time.perf_counter() + 5.0
+            while pool.replica_count("f") < 2:
+                assert time.perf_counter() < deadline, \
+                    "autoscaler never replaced the failed replica"
+                time.sleep(0.01)
+        finally:
+            asc.stop()
+    finally:
+        pool.stop()
+
+
+# ---------------------------------------------------------------------------
+# crash during a blue/green swap (integration)
+# ---------------------------------------------------------------------------
+
+def test_crash_during_swap_finishes_on_blue_zero_drops():
+    rt = Runtime(n_cpu=3, net=NetModel(scale=0.0), batch_wait_ms=2.0,
+                 detector_interval_s=0.02)
+    try:
+        blue_seen, green_seen = [], []
+        _flow(blue_seen, service_s=0.03, batching=True).deploy(
+            rt, name="bg")
+        # in-flight blue requests, with a crash injected mid-swap
+        rt.set_fault_plan(FaultPlan(seed=3).crash(rate=1.0, limit=1))
+        futs = [rt.call_dag("bg", _t(i)) for i in range(6)]
+        # swap: green generation goes live while blue is still serving
+        _flow(green_seen, batching=True).deploy(rt, name="bg")
+        # zero drops: every blue request resolves, on blue's nodes
+        got = sorted(f.result(timeout=10).rows[0].values[0] for f in futs)
+        assert got == [i + 1 for i in range(6)]
+        rt.set_fault_plan(None)
+        assert rt.pool.fault_counts["crash"] == 1
+        assert sorted(blue_seen) == list(range(6))
+        assert green_seen == []
+        # blue drains + retires despite the crash: batcher accounting
+        # (accepted minus completed) survived the failover
+        deadline = time.perf_counter() + 5.0
+        while rt.sweep_retired() or rt._draining:
+            assert time.perf_counter() < deadline, \
+                "blue generation never drained after the crash"
+            time.sleep(0.01)
+        # green serves new traffic
+        assert rt.call_dag("bg", _t(9)).result(
+            timeout=10).rows[0].values[0] == 10
+        assert 9 in green_seen
+    finally:
+        rt.stop()
+
+
+# ---------------------------------------------------------------------------
+# transient retries (integration)
+# ---------------------------------------------------------------------------
+
+def test_transient_fault_is_retried_to_success():
+    rt = Runtime(n_cpu=2, net=NetModel(scale=0.0))
+    try:
+        seen = []
+        fl = _flow(seen)
+        fl.deploy(rt, name="r")
+        fl.execute(_t()).result(timeout=10)
+        rt.set_fault_plan(FaultPlan(seed=2).transient(rate=1.0, limit=1))
+        assert fl.execute(_t(7)).result(timeout=10).rows[0].values[0] == 8
+        snap = rt.metrics_snapshot()
+        assert len(snap.get("dag/r/retry_t", [])) == 1
+        assert "dag/r/error_t" not in snap       # recovered, not failed
+    finally:
+        rt.stop()
+
+
+def test_exhausted_retries_deliver_the_typed_transient():
+    rt = Runtime(n_cpu=2, net=NetModel(scale=0.0),
+                 retry_policies={"default": RetryPolicy(
+                     max_attempts=2, base_s=0.001, jitter=0.0)})
+    try:
+        fl = _flow()
+        fl.deploy(rt, name="x")
+        fl.execute(_t()).result(timeout=10)
+        # every attempt faults: the caller gets the typed error, fast
+        rt.set_fault_plan(FaultPlan(seed=4).transient(rate=1.0))
+        with pytest.raises(Transient):
+            fl.execute(_t()).result(timeout=10)
+        rt.set_fault_plan(None)
+        snap = rt.metrics_snapshot()
+        assert len(snap.get("dag/x/retry_t", [])) == 1   # max_attempts=2
+        assert len(snap.get("dag/x/error_t", [])) == 1   # the delivery
+    finally:
+        rt.stop()
+
+
+def test_retry_never_taken_past_deadline_budget():
+    rt = Runtime(n_cpu=2, net=NetModel(scale=0.0),
+                 retry_policies={"default": RetryPolicy(
+                     max_attempts=10, base_s=0.5, multiplier=1.0,
+                     cap_s=0.5, jitter=0.0)})
+    try:
+        fl = _flow()
+        fl.deploy(rt, name="d")
+        fl.execute(_t()).result(timeout=10)
+        rt.set_fault_plan(FaultPlan(seed=6).transient(rate=1.0))
+        # 100ms budget, 500ms backoff: the (first) failure is delivered
+        # immediately instead of burning the budget in backoff sleeps
+        t0 = time.perf_counter()
+        with pytest.raises(Transient):
+            rt.call_dag("d", _t(), deadline_s=0.1).result(timeout=10)
+        assert time.perf_counter() - t0 < 0.4
+        rt.set_fault_plan(None)
+        assert "dag/d/retry_t" not in rt.metrics_snapshot()
+    finally:
+        rt.stop()
+
+
+# ---------------------------------------------------------------------------
+# straggler hedging (integration)
+# ---------------------------------------------------------------------------
+
+def test_hedge_wins_and_cancels_straggling_loser():
+    rt = Runtime(n_cpu=3, net=NetModel(scale=0.0), hang_timeout_s=30.0)
+    try:
+        seen = []
+        fl = _flow(seen)
+        dep = fl.deploy(rt, name="h")
+        fl.execute(_t()).result(timeout=10)
+        seen.clear()
+        rt.configure_hedging("h", dep.dag.output, 0.03)
+        # the primary straggles far past the hedge delay (but below the
+        # wedge timeout: this is hedging's win, not the detector's)
+        rt.set_fault_plan(FaultPlan(seed=5).hang(rate=1.0, hang_s=0.8,
+                                                 limit=1))
+        t0 = time.perf_counter()
+        assert fl.execute(_t(3)).result(timeout=10).rows[0].values[0] == 4
+        assert time.perf_counter() - t0 < 0.5    # did not wait out the hang
+        rt.set_fault_plan(None)
+        assert len(rt.metrics_snapshot().get("dag/h/hedge_t", [])) == 1
+        # loser cancellation: when the straggler wakes it finds the token
+        # claimed and skips execution — user code ran exactly once
+        time.sleep(1.0)
+        assert seen == [3]
+        assert rt.pool.fault_counts["wedge"] == 0
+    finally:
+        rt.stop()
+
+
+def test_hedge_suppressed_by_admission_gate_under_overload():
+    adm = AdmissionController(
+        classes={"interactive": ClassPolicy("interactive", priority=2)},
+        queue_depth_fn=lambda: 100_000, queue_cost_s=1e-3)
+    # 100s of modeled backlog vs a 50ms deadline: no headroom for backups
+    assert adm.note_hedge("interactive", deadline_s=0.05) is False
+    snap = adm.snapshot()
+    assert snap["interactive/hedge_offered"] == 1
+    assert snap["interactive/hedge_suppressed"] == 1
+    # hedges count as offered load in the arrival window
+    assert adm.rate_at_or_above(2, time.perf_counter()) > 0
+    # with headroom (no deadline pressure) the hedge is admitted
+    assert adm.note_hedge("interactive", deadline_s=None) is True
+
+
+# ---------------------------------------------------------------------------
+# idempotence under forced double execution
+# ---------------------------------------------------------------------------
+
+def test_double_execution_applies_kvs_write_once():
+    pool = ExecutorPool(KVS(), NetModel(scale=0.0), n_cpu=2)
+    try:
+        ran, delivered = [], []
+        gate = threading.Event()
+
+        def fn(tables, ctx):
+            ran.append(1)
+            ctx.kvs_put("model/state", "v1")
+            gate.wait(5.0)
+            return tables[0]
+
+        item = WorkItem(fn=fn, tables=[_t()], produced_on=[None],
+                        callback=lambda r, e, x: delivered.append((r, e)),
+                        dispatch_key=("req", "node", 0))
+        # force at-least-once: the item AND its clone each execute
+        e1, e2 = list(pool.executors.values())
+        e1.submit(item)
+        e2.submit(item.clone())
+        deadline = time.perf_counter() + 5.0
+        while len(ran) < 2:
+            assert time.perf_counter() < deadline
+            time.sleep(0.005)
+        gate.set()
+        deadline = time.perf_counter() + 5.0
+        while sum(e.completed for e in (e1, e2)) < 2:
+            assert time.perf_counter() < deadline
+            time.sleep(0.005)
+        # both executed, ONE delivered, ONE write applied
+        assert len(ran) == 2
+        assert len(delivered) == 1 and delivered[0][1] is None
+        assert pool.kvs.stats["puts"] == 1
+        assert pool.kvs.stats["dedup_puts"] == 1
+        assert pool.kvs.get("model/state", charge=False) == "v1"
+    finally:
+        pool.stop()
+
+
+# ---------------------------------------------------------------------------
+# regression: remove_replica / stop() lost queued work
+# ---------------------------------------------------------------------------
+
+def test_remove_replica_requeues_instead_of_dropping():
+    pool = ExecutorPool(KVS(), NetModel(scale=0.0), n_cpu=2)
+    try:
+        ids = list(pool.executors)
+        pool.assign("f", ids)
+        release = threading.Event()
+        done = []
+
+        def blocker(tables, ctx):
+            release.wait(5.0)
+            return tables[0]
+
+        def quick(tables, ctx):
+            return tables[0]
+
+        victim = pool.executors[ids[-1]]     # remove_replica trims ids[-1]
+        victim.submit(WorkItem(fn=blocker, tables=[_t()],
+                               produced_on=[None],
+                               callback=lambda r, e, x: done.append("b")))
+        time.sleep(0.05)                     # let the blocker start
+        for _ in range(3):
+            victim.submit(WorkItem(fn=quick, tables=[_t()],
+                                   produced_on=[None],
+                                   callback=lambda r, e, x:
+                                       done.append("q")))
+        assert pool.remove_replica("f") == ids[-1]
+        # pre-fix: the 3 queued items vanished, callbacks never fired
+        deadline = time.perf_counter() + 5.0
+        while done.count("q") < 3:
+            assert time.perf_counter() < deadline, \
+                f"queued items dropped by remove_replica: {done}"
+            time.sleep(0.005)
+        release.set()
+        deadline = time.perf_counter() + 5.0
+        while "b" not in done:
+            assert time.perf_counter() < deadline
+            time.sleep(0.005)
+    finally:
+        pool.stop()
+
+
+def test_pool_stop_fails_leftover_items_typed():
+    pool = ExecutorPool(KVS(), NetModel(scale=0.0), n_cpu=1)
+    release = threading.Event()
+    outcomes = []
+
+    def blocker(tables, ctx):
+        release.wait(5.0)
+        return tables[0]
+
+    ex = next(iter(pool.executors.values()))
+    ex.submit(WorkItem(fn=blocker, tables=[_t()], produced_on=[None],
+                       callback=lambda r, e, x: outcomes.append(e)))
+    time.sleep(0.05)
+    ex.submit(WorkItem(fn=blocker, tables=[_t()], produced_on=[None],
+                       callback=lambda r, e, x: outcomes.append(e)))
+    pool.stop()          # the queued second item must fail, not vanish
+    release.set()
+    deadline = time.perf_counter() + 5.0
+    while len(outcomes) < 2:
+        assert time.perf_counter() < deadline, \
+            "pool.stop() stranded a queued item"
+        time.sleep(0.005)
+    assert any(isinstance(e, RuntimeError) for e in outcomes)
+
+
+# ---------------------------------------------------------------------------
+# queue-depth admission signal (satellite)
+# ---------------------------------------------------------------------------
+
+def test_queue_depth_sheds_with_its_own_reason():
+    adm = AdmissionController(
+        classes={"interactive": ClassPolicy("interactive", priority=2)},
+        queue_depth_fn=lambda: 50_000, queue_cost_s=1e-3)
+    d = adm.admit("interactive", deadline_s=0.05)
+    assert not d.admitted
+    assert d.reason == "queue_depth"
+    assert d.estimate_s == pytest.approx(50.0)
+    # empty queues: the same gate admits
+    adm2 = AdmissionController(
+        classes={"interactive": ClassPolicy("interactive", priority=2)},
+        queue_depth_fn=lambda: 0, queue_cost_s=1e-3)
+    assert adm2.admit("interactive", deadline_s=0.05).admitted
+
+
+def test_runtime_autowires_pool_depth_into_admission():
+    rt = Runtime(n_cpu=1, net=NetModel(scale=0.0))
+    try:
+        adm = AdmissionController(classes={
+            "interactive": ClassPolicy("interactive", priority=2)})
+        rt.set_admission("z", adm)
+        assert adm.queue_depth_fn is not None
+        assert adm.queue_depth_fn() == rt.pool.total_depth()
+    finally:
+        rt.stop()
+
+
+# ---------------------------------------------------------------------------
+# controller: fault_rate detail + retry-storm escalation (satellite)
+# ---------------------------------------------------------------------------
+
+def test_controller_surfaces_fault_rate_and_retry_storm():
+    rt = Runtime(n_cpu=1, net=NetModel(scale=0.0))
+    try:
+        fl = _flow()
+        dep = fl.deploy(rt, name="c")
+        ctl = SLOController(rt, dep, slo_p99_s=1.0,
+                            profile=FlowProfile(), window_s=5.0)
+        now = time.perf_counter()
+        rt.record_metric("faults/crash_t", now)
+        rt.record_metric("dag/c/hedge_t", now)
+        fr = ctl.fault_rate()
+        assert fr["crash_rate"] > 0 and fr["hedge_rate"] > 0
+        assert fr["storm"] == 0.0
+        # a retry storm: recovery work dwarfs completions (arrivals are
+        # spread so the tick's rate estimate clears the idle threshold)
+        for i in range(5):
+            rt.record_metric("dag/c/request_t", now - 2.0 + i * 0.4)
+        for _ in range(40):
+            rt.record_metric("dag/c/retry_t", now)
+        fr = ctl.fault_rate()
+        assert fr["storm"] == 1.0
+        ev = ctl.tick()
+        assert ev.detail["fault"]["storm"] == 1.0
+        assert ev.detail["slo_ok"] is False      # the storm IS an SLO miss
+    finally:
+        rt.stop()
