@@ -37,7 +37,13 @@ straggler hedging armed — per-point p50/p99, injected-vs-detected fault
 counts, retry/hedge/requeue counters, and integrity bits; CI asserts
 every request resolves TYPED (zero hangs, zero untyped errors), counters
 reconcile, batchers drain, zero hot-path re-traces, low-fault p99 within
-SLO, and no fault-free p50 regression vs the overload 0.5x point) so CI
+SLO, and no fault-free p50 regression vs the overload 0.5x point;
+``observability`` -> ``BENCH_observability.json``: tracing overhead at
+1%/10%/100% head sampling vs disabled on a 3-node chain with a known
+slow middle node, the SLO-miss attribution's dominant (node, component)
+against that ground truth, Chrome-export span coverage, and a
+zero-retrace check — CI asserts the 10%-sampling p50 within 5% of the
+disabled baseline and the dominant contributor correctly named) so CI
 can track the perf trajectory across PRs.
 """
 from __future__ import annotations
@@ -48,7 +54,7 @@ import time
 
 SUITES = ("fusion", "jit_fusion", "competitive", "autoscaling", "locality",
           "batching", "slo_planner", "replan", "overload", "faults",
-          "model_serving", "pipelines", "roofline")
+          "model_serving", "pipelines", "roofline", "observability")
 
 
 def main() -> None:
@@ -128,6 +134,11 @@ def main() -> None:
     if "roofline" in only:
         from benchmarks import roofline_table
         emit(roofline_table.run())
+    if "observability" in only:
+        from benchmarks import observability
+        emit(observability.run(
+            n_requests=120 if args.fast else 250,
+            json_path="BENCH_observability.json" if args.json else None))
     print(f"# {len(rows)} rows in {time.time()-t0:.1f}s", file=sys.stderr)
 
 

@@ -112,7 +112,20 @@ class DeployedFlow:
         return list(self.dag.nodes)
 
     def explain(self) -> str:
-        """Human-readable compile report: plan + per-pass trace."""
+        """Human-readable compile report: plan + per-pass trace, plus —
+        when the runtime's tracer holds kept traces for this flow — the
+        per-node SLO-miss attribution table (where the milliseconds of
+        the interesting requests actually went)."""
         lines = [repr(self.plan), ""]
         lines += [repr(t) for t in self.pass_trace]
+        tracer = getattr(self.runtime, "tracer", None)
+        if tracer is not None and tracer.enabled:
+            kept = tracer.kept(self.dag.name)
+            if kept:
+                from repro.obs.attribution import attribute
+                att = attribute(kept)
+                lines += ["", f"-- observed attribution "
+                          f"({att.n_traces} kept traces, "
+                          f"{att.n_miss} SLO misses, {att.n_shed} shed) --",
+                          att.table()]
         return "\n".join(lines)

@@ -58,7 +58,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import operators as ops
-from repro.core.table import HOST_COPIES, DeviceTable, Table
+from repro.core.table import (HOST_COPIES, DeviceTable, Table,
+                              note_host_copy)
 
 try:  # the container bakes jax in, but keep the core importable without it
     import jax
@@ -765,7 +766,7 @@ class BatchedJittedFuse(JittedFuse):
             # honest accounting: this readback IS bulk row payload
             # crossing the boundary (rows arriving as host numpy — the
             # normal serving case — skip it entirely)
-            HOST_COPIES["gathers"] += 1
+            note_host_copy("gathers")
             self.host_gathers += 1
         groups: Dict[Tuple, Tuple[List[int], List[List[Any]]]] = {}
         for i, rvals in enumerate(host_vals):

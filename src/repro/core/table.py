@@ -19,6 +19,7 @@ device->host boundary in ``host_rows``/``to_table``).
 from __future__ import annotations
 
 import itertools
+import threading
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -135,6 +136,35 @@ def schema_compatible(a: Schema, b: Schema) -> bool:
 #: payload crossing the PCIe boundary.
 HOST_COPIES: Dict[str, int] = {"stacks": 0, "gathers": 0}
 
+# per-thread copy capture: an executor thread brackets one item's
+# execution with start/end and gets THAT item's copy counts, without
+# the races a global-counter delta would have across worker threads
+_copy_capture = threading.local()
+
+
+def note_host_copy(kind: str) -> None:
+    """Count one host<->device bulk copy ('stacks' or 'gathers') against
+    the global counters and, when the current thread has a capture open,
+    against that capture."""
+    HOST_COPIES[kind] += 1
+    cap = getattr(_copy_capture, "counts", None)
+    if cap is not None:
+        cap[kind] = cap.get(kind, 0) + 1
+
+
+def copy_capture_start() -> None:
+    """Begin attributing this thread's host copies (until
+    :func:`copy_capture_end`) to the current work item."""
+    _copy_capture.counts = {}
+
+
+def copy_capture_end() -> Optional[Dict[str, int]]:
+    """Close this thread's capture; returns the counts since start (None
+    when no capture was open, {} when no copies happened)."""
+    cap = getattr(_copy_capture, "counts", None)
+    _copy_capture.counts = None
+    return cap
+
 
 def reset_host_copies() -> None:
     HOST_COPIES["stacks"] = 0
@@ -194,7 +224,7 @@ class DeviceTable:
             stacked = np.stack(col + col[:1] * (cap - n)) if col else \
                 np.zeros((0,))
             columns.append(jnp.asarray(stacked))
-        HOST_COPIES["stacks"] += 1
+        note_host_copy("stacks")
         return DeviceTable(schema, columns, n, row_ids, groups,
                            grouping=grouping, mask=None, donatable=True)
 
@@ -276,7 +306,7 @@ class DeviceTable:
         if self.mask is not None:
             payload = payload + (self.mask,)
         host = jax.device_get(payload)
-        HOST_COPIES["gathers"] += 1
+        note_host_copy("gathers")
         ncol = len(self.columns)
         mask_h = host[ncol] if self.mask is not None else None
         out: List[Tuple[int, Row]] = []

@@ -1,0 +1,39 @@
+"""Observability: end-to-end request tracing, histogram metrics, and
+SLO-miss attribution.
+
+The serving stack makes many latency-affecting decisions per request
+(admission shed/degrade, batch merging and EDF reordering, executor
+queueing, retries, hedges, failover requeues, blue/green swaps).  This
+package records WHERE each millisecond went so the SLO controller — and
+a human — can answer "why did this request miss its deadline?":
+
+* :mod:`repro.obs.trace` — ``Trace``/``Span``/``Tracer``: monotonic-clock
+  spans on a per-request trace carried by ``RequestContext``; head
+  sampling plus tail-based always-keep for SLO-miss/error/shed/retried
+  traces; bounded ring buffer of kept traces.
+* :mod:`repro.obs.metrics` — log-bucketed mergeable ``Histogram`` and
+  time-``WindowedCounter``, the bounded replacements for unbounded
+  per-key value lists.
+* :mod:`repro.obs.export` — JSON and Chrome trace-event
+  (``chrome://tracing`` / Perfetto) export of kept traces.
+* :mod:`repro.obs.attribution` — folds kept traces into a per-node
+  queue/service/transfer/retry/hedge breakdown; an SLO miss names its
+  dominant contributor.
+* :mod:`repro.obs.clock` — THE clock for rate-window timestamps
+  (monotonic); every ``*_t`` metric series and every window anchor must
+  use it, or rates silently window wall-clock values against monotonic
+  anchors.
+"""
+from repro.obs.attribution import Attribution, NodeBreakdown, attribute
+from repro.obs.clock import now
+from repro.obs.export import (export_chrome, to_chrome_events, to_json,
+                              write_chrome)
+from repro.obs.metrics import Histogram, HistogramSnapshot, WindowedCounter
+from repro.obs.trace import Span, Trace, Tracer
+
+__all__ = [
+    "Attribution", "NodeBreakdown", "attribute", "now",
+    "export_chrome", "to_chrome_events", "to_json", "write_chrome",
+    "Histogram", "HistogramSnapshot", "WindowedCounter",
+    "Span", "Trace", "Tracer",
+]

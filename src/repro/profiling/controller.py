@@ -38,7 +38,9 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
 
-from repro.profiling.estimator import LatencyEstimator, Workload
+from repro.obs.attribution import attribute
+from repro.obs.clock import now as _mono
+from repro.profiling.estimator import FaultStats, LatencyEstimator, Workload
 from repro.profiling.optimizer import NodeConfig, PlanConfig, propose
 from repro.profiling.profiler import FlowProfile, refresh_from_plan
 
@@ -132,7 +134,7 @@ class SLOController:
         # window against NOW (same clock call_dag stamps), not the newest
         # request — anchoring on ts[-1] would re-measure the last burst's
         # rate forever after traffic stops, pinning stale replica targets
-        now = time.perf_counter()
+        now = _mono()
         recent = [t for t in ts if t >= now - self.window_s]
         if len(recent) < 2:
             return 0.0
@@ -149,7 +151,7 @@ class SLOController:
         snap = snapshot if snapshot is not None \
             else self.runtime.metrics_snapshot()
         name = self.deployed.dag.name
-        now = time.perf_counter()
+        now = _mono()
         lo = now - self.window_s
         errs = sum(1 for t in snap.get(f"dag/{name}/error_t", [])
                    if t >= lo)
@@ -181,7 +183,7 @@ class SLOController:
         snap = snapshot if snapshot is not None \
             else self.runtime.metrics_snapshot()
         name = self.deployed.dag.name
-        lo = time.perf_counter() - self.window_s
+        lo = _mono() - self.window_s
 
         def count(key: str) -> int:
             return sum(1 for t in snap.get(key, []) if t >= lo)
@@ -212,7 +214,7 @@ class SLOController:
         snap = snapshot if snapshot is not None \
             else self.runtime.metrics_snapshot()
         name = self.deployed.dag.name
-        lo = time.perf_counter() - self.window_s
+        lo = _mono() - self.window_s
 
         def count(key: str) -> int:
             return sum(1 for t in snap.get(key, []) if t >= lo)
@@ -250,8 +252,13 @@ class SLOController:
 
     # -- the loop body -------------------------------------------------------
     def tick(self) -> ControllerEvent:
-        now = time.perf_counter()
-        snap = self.runtime.metrics_snapshot()
+        now = _mono()
+        # prefix-filtered snapshot: the controller only reads this DAG's
+        # series plus the fleet-wide fault series, so the metrics-lock
+        # hold no longer scales with every OTHER deployment's history
+        name = self.deployed.dag.name
+        snap = self.runtime.metrics_snapshot(
+            prefix=(f"dag/{name}/", "faults/", f"admission/{name}/"))
         rate = self.arrival_rate(snap)
         if rate < self.min_rate:
             ev = ControllerEvent("idle", now, rate)
@@ -282,21 +289,32 @@ class SLOController:
         # already fixed the miss, and trusting the proposal's unapplied
         # compile-time knobs would mask a persistent miss forever
         current = self._live_config(proposal)
-        cur_pred = LatencyEstimator(self.profile, net=self.runtime.net) \
+        # fault-tolerance activity feeds the estimator: crashes and
+        # hedged stragglers that RECOVERED don't show up in error_t, but
+        # disturbed requests re-pay the path — the fault-aware estimator
+        # inflates the predicted p99 by the measured disturbed fraction
+        # instead of judging the SLO against a clean-path fiction
+        fault = self.fault_rate(snap)
+        fstats = FaultStats(
+            crash_rate=fault["crash_rate"],
+            wedge_rate=fault["wedge_rate"],
+            retry_rate=fault["retry_rate"],
+            requeue_rate=fault["requeue_rate"],
+            detection_s=getattr(self.runtime, "detector_interval_s", 0.0))
+        cur_pred = LatencyEstimator(self.profile, net=self.runtime.net,
+                                    fault=fstats) \
             .estimate(self.deployed.plan, current,
                       Workload(arrival_rate=rate))
         detail["current_p99_ms"] = cur_pred.p99_s * 1e3
+        detail["fault_inflation"] = fstats.disturbed_fraction(rate)
         # a rising error rate is an SLO miss: the latency series only
         # records successes, so under failures the measured (and modeled)
         # p99 improves exactly when the system degrades
         err_rate = self.error_rate(snap)
         detail["error_rate"] = err_rate
-        # fault-tolerance activity rides next to the error rate: crashes
-        # and hedged stragglers that RECOVERED don't show up in error_t,
-        # but a retry storm (recovery work exceeding completions) means
-        # the deployment is burning capacity re-executing — an SLO miss
-        # even while callers still get answers
-        fault = self.fault_rate(snap)
+        # a retry storm (recovery work exceeding completions) means the
+        # deployment is burning capacity re-executing — an SLO miss even
+        # while callers still get answers
         detail["fault"] = fault
         slo_ok = cur_pred.meets(self.slo_p99_s) \
             and err_rate <= self.max_error_rate \
@@ -309,6 +327,15 @@ class SLOController:
         prot = self.protection_rates(snap)
         detail["protection"] = prot
         detail["protecting"] = any(v > 0 for v in prot.values())
+        # SLO-miss attribution from the tracer's kept traces: the
+        # per-node queue/service/transfer/retry/hedge breakdown, with the
+        # dominant contributor named — the "why" next to every miss
+        tracer = getattr(self.runtime, "tracer", None)
+        if tracer is not None and tracer.enabled:
+            kept = tracer.kept(name)
+            if kept:
+                detail["attribution"] = attribute(
+                    kept, slo_only=True).to_dict()
         adm = getattr(self.runtime, "admission_for", lambda _n: None)(
             self.deployed.dag.name)
         if adm is not None:

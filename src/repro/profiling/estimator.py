@@ -45,6 +45,37 @@ class Workload:
     request_rows: int = 1            # rows per request
 
 
+@dataclasses.dataclass
+class FaultStats:
+    """Measured fault pressure (events/sec from the runtime's windowed
+    fault counters) the estimator folds into its tail prediction: a
+    request caught by a retry or a crash requeue pays roughly one extra
+    service time plus the detector's reaction, so under fault pressure
+    the clean-path p99 is an underestimate exactly when the controller
+    most needs it to be honest."""
+    crash_rate: float = 0.0          # executor crashes/s
+    wedge_rate: float = 0.0          # wedge detections/s
+    retry_rate: float = 0.0          # transient retries/s
+    requeue_rate: float = 0.0        # items requeued by failover/s
+    detection_s: float = 0.0         # detector reaction time (interval)
+
+    def disturbed_fraction(self, arrival_rate: float) -> float:
+        """Fraction of requests whose attempt is disturbed (retried or
+        requeued) — the probability mass that pays the inflated path."""
+        lam = max(arrival_rate, 1e-9)
+        return min(1.0, (self.retry_rate + self.requeue_rate) / lam)
+
+    def inflate_p99(self, p99_s: float, arrival_rate: float) -> float:
+        """Predicted p99 with fault pressure folded in: the disturbed
+        fraction re-pays the whole clean path (re-execution) plus the
+        failure-detection delay.  Zero rates leave the estimate exactly
+        unchanged."""
+        p = self.disturbed_fraction(arrival_rate)
+        if p <= 0.0:
+            return p99_s
+        return p99_s * (1.0 + p) + p * self.detection_s
+
+
 def erlang_c(c: int, a: float) -> float:
     """P(wait) for an M/M/c queue with offered load ``a`` erlangs
     (``a = lambda / mu``).  Returns 1.0 at/above saturation."""
@@ -94,9 +125,14 @@ class LatencyEstimator:
     """Maps (plan, per-node config, workload) -> predicted latency."""
 
     def __init__(self, profile: FlowProfile,
-                 net: Optional[NetModel] = None):
+                 net: Optional[NetModel] = None,
+                 fault: Optional[FaultStats] = None):
         self.profile = profile
         self.net = net or NetModel()
+        # measured fault pressure; when set, estimate() inflates the p99
+        # walk by the disturbed-request fraction (ROADMAP: fault-aware
+        # estimator)
+        self.fault = fault
 
     # -- per-node model ------------------------------------------------------
     def node_estimate(self, op_id: int, cfg, wl: Workload,
@@ -222,6 +258,9 @@ class LatencyEstimator:
         while cur is not None and cur != SOURCE_ID:
             path.append(cur)
             cur = pred.get(cur)
-        return LatencyEstimate(mean_s=done_mean[out], p99_s=done_p99[out],
+        p99 = done_p99[out]
+        if self.fault is not None:
+            p99 = self.fault.inflate_p99(p99, wl.arrival_rate)
+        return LatencyEstimate(mean_s=done_mean[out], p99_s=p99,
                                feasible=feasible, nodes=estimates,
                                critical_path=list(reversed(path)))

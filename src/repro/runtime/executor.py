@@ -30,6 +30,7 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.lowering import DegradePolicy, degraded_execution
+from repro.core.table import copy_capture_end, copy_capture_start
 from repro.runtime.kvs import KVS, CacheClient
 from repro.runtime.netmodel import NetModel, nbytes
 from repro.serving.admission import DeadlineExceeded
@@ -69,6 +70,14 @@ class WorkItem:
     # which dispatch attempt this is (0 = original); the retry policy
     # reads it to cap redispatches and size backoff
     attempt: int = 0
+    # observability: every attempt of the logical item (original, crash
+    # requeue, hedge, retry clone) appends events to ONE shared log —
+    # ("start"|"cancelled"|"requeue", executor_id, t) and
+    # ("done", executor_id, t, queue_s, exec_s, copies) — so the single
+    # winning callback can reconstruct the full attempt history
+    attempt_log: List[Tuple] = dataclasses.field(default_factory=list)
+    # host<->device copy counts captured around THIS item's execution
+    copies: Optional[Dict[str, int]] = None
 
     def clone(self) -> "WorkItem":
         """A redispatchable copy sharing this item's completion token and
@@ -79,7 +88,8 @@ class WorkItem:
                         callback=self.callback,
                         deadline_t=self.deadline_t, degrade=self.degrade,
                         token=self.token, dispatch_key=self.dispatch_key,
-                        attempt=self.attempt)
+                        attempt=self.attempt,
+                        attempt_log=self.attempt_log)
 
     def deliver(self, result, error, executor_id: Optional[str]) -> bool:
         """Claim the completion and fire the callback; False if another
@@ -178,6 +188,7 @@ class Executor:
             if item.token.claimed:
                 # another attempt (hedge winner, crash requeue) already
                 # delivered: loser cancellation — skip without executing
+                item.attempt_log.append(("cancelled", self.id, t_start))
                 self.current = None
                 self.busy = False
                 self.completed += 1
@@ -197,6 +208,10 @@ class Executor:
                     self.busy = False
                     self.completed += 1
                 continue
+            # the attempt starts HERE (worker claimed the item and went
+            # busy) — logged before fault injection so a crashed or hung
+            # attempt still counts in the winning span's attempt history
+            item.attempt_log.append(("start", self.id, t_start))
             fault = None
             if self._injector is not None:
                 fault = self._injector.draw(self.id, self.resource_class)
@@ -212,6 +227,8 @@ class Executor:
                 # detector race us; if either wins, skip the execution
                 time.sleep(fault.hang_s)
                 if item.token.claimed:
+                    item.attempt_log.append(
+                        ("cancelled", self.id, time.perf_counter()))
                     self.current = None
                     self.busy = False
                     self.completed += 1
@@ -225,15 +242,27 @@ class Executor:
                     if src is not None and src != self.id:
                         self.net.charge(nbytes(t))
                 ctx = ExecutionContext(self, item)
-                if item.degrade is not None:
-                    with degraded_execution(item.degrade):
+                copy_capture_start()
+                try:
+                    if item.degrade is not None:
+                        with degraded_execution(item.degrade):
+                            result = item.fn(item.tables, ctx)
+                    else:
                         result = item.fn(item.tables, ctx)
-                else:
-                    result = item.fn(item.tables, ctx)
-                item.exec_s = time.perf_counter() - t_start
+                finally:
+                    item.copies = copy_capture_end()
+                t_end = time.perf_counter()
+                item.exec_s = t_end - t_start
+                item.attempt_log.append(("done", self.id, t_end,
+                                         item.queue_s, item.exec_s,
+                                         item.copies))
                 item.deliver(result, None, self.id)
             except BaseException as e:
-                item.exec_s = time.perf_counter() - t_start
+                t_end = time.perf_counter()
+                item.exec_s = t_end - t_start
+                item.attempt_log.append(("done", self.id, t_end,
+                                         item.queue_s, item.exec_s,
+                                         item.copies))
                 item.deliver(None, e, self.id)
             finally:
                 self.current = None
@@ -463,6 +492,8 @@ class ExecutorPool:
             target = min(targets, key=lambda e: e.load)
             try:
                 target.submit(item)
+                item.attempt_log.append(
+                    ("requeue", target.id, time.perf_counter()))
                 n += 1
             except RuntimeError:        # stopped under our feet: next pass
                 try:

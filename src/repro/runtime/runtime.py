@@ -20,6 +20,9 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.lowering import DEFAULT_BUCKETS, DegradePolicy, bucket_rows
 from repro.core.table import DeviceTable, Table
+from repro.obs.clock import now as _mono
+from repro.obs.metrics import Histogram, HistogramSnapshot, WindowedCounter
+from repro.obs.trace import Trace, Tracer
 from repro.runtime.dag import RuntimeDag, RuntimeNode
 from repro.runtime.executor import ExecutorPool, WorkItem
 from repro.runtime.kvs import KVS
@@ -33,6 +36,57 @@ from repro.serving.retry import CompletionToken, ExecutorLost, RetryPolicy
 _req_ids = itertools.count()
 
 
+def _attempt_attrs(log) -> Dict[str, Any]:
+    """Summarize a WorkItem's shared attempt log (executor-side start /
+    cancelled / requeue / done entries, shared across retry and hedge
+    clones) into exec-span attributes."""
+    attrs: Dict[str, Any] = {
+        "attempts": sum(1 for e in log if e[0] == "start"),
+        "cancelled": sum(1 for e in log if e[0] == "cancelled"),
+        "requeues": sum(1 for e in log if e[0] == "requeue"),
+    }
+    return attrs
+
+
+def _trace_exec_events(tr: Trace, node_name: str, log) -> None:
+    """Replay loser/requeue entries from an attempt log onto the trace as
+    zero-duration spans at their ORIGINAL timestamps (the callback fires
+    once, after the winner — these happened earlier)."""
+    for e in log:
+        if e[0] == "cancelled":
+            tr.span(f"cancelled@{node_name}", e[2], e[2], executor=e[1])
+        elif e[0] == "requeue":
+            tr.span(f"requeue@{node_name}", e[2], e[2], executor=e[1])
+            tr.retried = True
+
+
+def _exec_span_cb(tr: Trace, node_name: str, item, cb,
+                  t_enq: float, link: Optional[int] = None):
+    """Wrap a dispatch callback to close an ``exec@node`` span when the
+    result (or error) is delivered: covers executor queue wait + service
+    time + any retry/hedge overhead, with the measured split in attrs."""
+    def wrapped(result, error, exec_id):
+        t1 = _mono()
+        log = list(item.attempt_log)
+        attrs = _attempt_attrs(log)
+        attrs["executor"] = exec_id
+        done = None
+        for e in log:
+            if e[0] == "done" and e[1] == exec_id:
+                done = e
+        if done is not None:
+            attrs["queue_s"] = done[3]
+            attrs["exec_s"] = done[4]
+            if done[5]:
+                attrs["copies"] = done[5]
+        if error is not None:
+            attrs["error"] = type(error).__name__
+        _trace_exec_events(tr, node_name, log)
+        tr.span(f"exec@{node_name}", t_enq, t1, link=link, **attrs)
+        cb(result, error, exec_id)
+    return wrapped
+
+
 @dataclasses.dataclass
 class RequestContext:
     """Per-request overload-protection state, carried from ``call_dag``
@@ -44,6 +98,9 @@ class RequestContext:
     # idempotence: per-request id, part of every dispatched item's
     # ``dispatch_key`` so at-least-once redispatch can't double-apply
     req_id: Optional[int] = None
+    # the request's live trace (None when tracing is disabled or the
+    # request is synthetic); instrumentation sites gate on it
+    trace: Optional[Trace] = None
 
 
 class Runtime:
@@ -57,8 +114,15 @@ class Runtime:
                  hang_timeout_s: float = 5.0,
                  detector_interval_s: float = 0.05,
                  auto_replace: bool = True,
-                 retry_policies: Optional[Dict[str, RetryPolicy]] = None):
+                 retry_policies: Optional[Dict[str, RetryPolicy]] = None,
+                 tracer: Optional[Tracer] = None):
         self.net = net or NetModel()
+        # tracing defaults to tail-keep only (sample_rate=0): nothing is
+        # retained unless a request sheds/errors/misses/retries.  Pass
+        # Tracer(enabled=False) to strip even the per-request span
+        # recording, or a higher sample_rate to also keep healthy traces.
+        self.tracer = tracer if tracer is not None else Tracer(
+            enabled=True, sample_rate=0.0)
         self.kvs = KVS(self.net)
         injector = FaultInjector(fault_plan) if fault_plan is not None \
             else None
@@ -72,6 +136,7 @@ class Runtime:
                                  on_fault=self._on_fault)
         # heartbeat failure detector: always on — a crashed or wedged
         # executor must never strand in-flight items, fault plan or not
+        self.detector_interval_s = detector_interval_s
         self.pool.start_failure_detector(interval_s=detector_interval_s)
         # per-class transient-retry policies ("default" backs all classes
         # without an explicit entry); deadline-budget-aware backoff
@@ -104,6 +169,13 @@ class Runtime:
         # use record_metric / metrics_snapshot)
         self.metrics: Dict[str, List[float]] = {}
         self._metrics_lock = threading.Lock()
+        # bounded parallel stores fed by record_metric: rate-valued *_t
+        # series (values ARE event timestamps) into windowed counters,
+        # everything else into log-bucketed mergeable histograms —
+        # constant-memory, O(1)-record views the controller can read
+        # without copying raw series
+        self._hists: Dict[str, Histogram] = {}
+        self._counters: Dict[str, WindowedCounter] = {}
         # per-node batching overrides (SLO optimizer PlanConfig), keyed
         # (dag name, node name) — LOGICAL, not per generation: a replanned
         # green generation inherits the hot-applied knobs of matching
@@ -318,6 +390,10 @@ class Runtime:
                         deadline_t=ctx.deadline_t if ctx else None,
                         degrade=ctx.degrade if ctx else None,
                         dispatch_key=key)
+        tr = ctx.trace if ctx is not None else None
+        if tr is not None:
+            item.callback = _exec_span_cb(tr, node.name, item, callback,
+                                          _mono())
         if pinned:
             # pinned to the producer's device: redispatching elsewhere
             # would lose the resident buffers, so no retry/hedge — the
@@ -342,12 +418,49 @@ class Runtime:
             series.append(value)
             if len(series) >= 2 * self.METRIC_SERIES_CAP:
                 del series[:-self.METRIC_SERIES_CAP]
+            # bounded dual store: *_t series are event-timestamp streams
+            # (rate-valued) -> windowed counter binned by the stamp;
+            # everything else is value-distributed -> histogram
+            if key.endswith("_t"):
+                c = self._counters.get(key)
+                if c is None:
+                    c = self._counters[key] = WindowedCounter()
+                c.note(value)
+            else:
+                h = self._hists.get(key)
+                if h is None:
+                    h = self._hists[key] = Histogram()
+                h.record(value)
 
-    def metrics_snapshot(self) -> Dict[str, List[float]]:
-        """A consistent copy of every metric series (the controller reads
-        this while executor callbacks keep appending)."""
+    def metrics_snapshot(self, prefix=None) -> Dict[str, List[float]]:
+        """A consistent copy of metric series (the controller reads this
+        while executor callbacks keep appending).  ``prefix`` — a string
+        or tuple of strings — restricts the copy to matching keys, which
+        keeps the lock hold (and the stall writers see) proportional to
+        what the reader actually consumes instead of every series ever
+        recorded."""
         with self._metrics_lock:
-            return {k: list(v) for k, v in self.metrics.items()}
+            if prefix is None:
+                return {k: list(v) for k, v in self.metrics.items()}
+            return {k: list(v) for k, v in self.metrics.items()
+                    if k.startswith(prefix)}
+
+    def metric_histogram(self, key: str) -> Optional[HistogramSnapshot]:
+        """Mergeable snapshot of a value-distributed series' histogram
+        (None if the key was never recorded)."""
+        with self._metrics_lock:
+            h = self._hists.get(key)
+            return h.snapshot() if h is not None else None
+
+    def metric_rate(self, key: str, window_s: float,
+                    now: Optional[float] = None) -> float:
+        """Events/sec for a ``*_t`` series over the trailing window, read
+        from the windowed counter (no series scan, no copy)."""
+        with self._metrics_lock:
+            c = self._counters.get(key)
+            if c is None:
+                return 0.0
+            return c.rate(window_s, now if now is not None else _mono())
 
     # -- fault tolerance ------------------------------------------------------
     def _on_fault(self, kind: str, executor_id: str, n_requeued: int):
@@ -355,7 +468,7 @@ class Runtime:
         volume as metric series (timestamps, like every *_t series) the
         SLO controller folds into ``fault_rate`` — kept SEPARATE from
         ``error_t``: a recovered fault is not a request failure."""
-        now = time.perf_counter()
+        now = _mono()
         self.record_metric(f"faults/{kind}_t", now)
         for _ in range(n_requeued):
             self.record_metric("faults/requeued_t", now)
@@ -382,7 +495,8 @@ class Runtime:
 
     def _submit_resilient(self, node: RuntimeNode, target, item: WorkItem,
                           ctx: Optional[RequestContext],
-                          dag_name: str = "") -> None:
+                          dag_name: str = "",
+                          traces: Optional[List[Trace]] = None) -> None:
         """Submit with the fault-tolerance wrapper:
 
         * **completion token** — every attempt (original, crash requeue,
@@ -400,6 +514,9 @@ class Runtime:
         """
         klass = ctx.klass if ctx is not None else "interactive"
         deadline_s = ctx.deadline_s if ctx is not None else None
+        if traces is None:
+            traces = [ctx.trace] if ctx is not None \
+                and ctx.trace is not None else []
         policy = self._retry_policies.get(
             klass, self._retry_policies["default"])
         hedge_delay = self._hedge_delays.get((dag_name, node.name))
@@ -415,12 +532,17 @@ class Runtime:
                     t.cancel()
                 if error is not None:
                     delay = policy.next_delay(
-                        work.attempt, error, time.perf_counter(),
+                        work.attempt, error, _mono(),
                         deadline_t=work.deadline_t, rng=self._retry_rng)
                     if delay is not None:
                         if dag_name:
                             self.record_metric(f"dag/{dag_name}/retry_t",
-                                               time.perf_counter())
+                                               _mono())
+                        for tr in traces:
+                            tr.event(f"retry@{node.name}",
+                                     attempt=work.attempt + 1,
+                                     delay_s=delay,
+                                     cause=type(error).__name__)
                         nxt = work.clone()
                         nxt.token = CompletionToken()
                         nxt.attempt = work.attempt + 1
@@ -456,7 +578,10 @@ class Runtime:
                         return
                     if dag_name:
                         self.record_metric(f"dag/{dag_name}/hedge_t",
-                                           time.perf_counter())
+                                           _mono())
+                    for tr in traces:
+                        tr.event(f"hedge_launch@{node.name}",
+                                 delay_s=hedge_delay)
                     try:
                         # shared token: first result wins, loser cancelled
                         min(others, key=lambda e: e.load).submit(
@@ -555,15 +680,20 @@ class Runtime:
                 mkey = f"batch/{dag_name}/{node.name}" if dag_name \
                     else f"batch/{node.name}"
 
-                def _drop(args, err, _mkey=mkey):
+                def _drop(args, err, _mkey=mkey, _node=node.name):
                     # a submit can slip in between the sweep's quiescence
                     # check and close() — the drained item's request
                     # callback must still fire, or its future would hang
                     # forever (nobody waits on Batcher item events here).
                     # Deadline expiries land here too; count them.
                     if isinstance(err, DeadlineExceeded):
-                        self.record_metric(f"{_mkey}/expired_t",
-                                           time.perf_counter())
+                        self.record_metric(f"{_mkey}/expired_t", _mono())
+                    d_ctx = args[4]
+                    if d_ctx is not None and d_ctx.trace is not None:
+                        # the request died waiting in the batcher: close
+                        # the queue span so attribution sees the wait
+                        d_ctx.trace.span(f"queue@{_node}", args[5],
+                                         dropped=type(err).__name__)
                     args[2](None, err, None)
 
                 b = Batcher(self._make_batch_fn(node, dag_name, dag),
@@ -574,7 +704,8 @@ class Runtime:
                             on_drop=_drop)
                 self._batchers[key] = b
         try:
-            b.submit((tables, produced_on, callback, locality_key, ctx),
+            b.submit((tables, produced_on, callback, locality_key, ctx,
+                      _mono()),
                      deadline_t=ctx.deadline_t if ctx else None)
         except RuntimeError as e:       # closed under our feet (stop())
             callback(None, e, None)
@@ -585,7 +716,7 @@ class Runtime:
             # merge all request tables into one invocation (paper §4)
             live = []
             for entry in arg_list:
-                ts, po, cb, lk, _ctx = entry
+                ts, po, cb, lk, _ctx, _tq = entry
                 if not ts:
                     # a request with no input tables can't join the merge;
                     # fail it alone instead of crashing the whole batch
@@ -601,30 +732,49 @@ class Runtime:
                 # — the fn sees an empty table, returns an empty result
                 template = live[0][0][0]
                 big = template.with_rows(
-                    [r for ts, _, _, _, _ in live for t in ts
+                    [r for ts, _, _, _, _, _ in live for t in ts
                      for r in t.rows])
                 # locality: any request's resolved ref steers the whole
                 # batch (members share the node, hence typically the ref)
-                lk = next((k for _, _, _, k, _ in live if k is not None),
-                          None)
+                lk = next((k for _, _, _, k, _, _ in live
+                           if k is not None), None)
                 ex = self.pick_executor(
                     node, lk, prefer_reserved=self._is_prepared(dag))
             except BaseException as e:
                 # nobody waits on the Batcher items — errors must reach the
                 # per-request callbacks, not die in the batch thread
-                for _, _, cb, _, _ in live:
+                for _, _, cb, _, _, _ in live:
                     try:
                         cb(None, e, None)
                     except BaseException:
                         pass
                 return [None] * len(arg_list)
             fn = node.batched_fn or node.fn
-            t_submit = time.perf_counter()
+            t_submit = _mono()
+            # one id names the merged dispatch everywhere: the dispatch
+            # key, the batch-level span, and the link on every member's
+            # exec span
+            bid = next(_req_ids)
+            # batch formation closes each traced member's batcher-wait
+            # queue span; EDF reordering of THIS batch is read off the
+            # live batcher (the batch fn runs on its flush thread)
+            batcher = self.batcher_for(
+                dag_name, node.name,
+                generation=dag.generation if dag is not None else 0)
+            reordered = bool(batcher is not None
+                             and batcher.last_reordered)
+            traced = [c.trace for _, _, _, _, c, _ in live
+                      if c is not None and c.trace is not None]
+            for _, _, _, _, c, tq in live:
+                if c is not None and c.trace is not None:
+                    c.trace.span(f"queue@{node.name}", tq, t_submit,
+                                 batch_size=len(big.rows),
+                                 reordered=reordered)
             # the merged batch inherits the LOOSEST member deadline: a
             # batch is only pointless once every member's deadline passed
             # (per-member expiry already happened in the Batcher)
             deadlines = [c.deadline_t if c is not None else None
-                         for _, _, _, _, c in live]
+                         for _, _, _, _, c, _ in live]
             batch_deadline = (max(deadlines)
                               if deadlines and None not in deadlines
                               else None)
@@ -633,8 +783,7 @@ class Runtime:
             # across crash requeues / hedges of the whole batch
             item = WorkItem(fn=fn, tables=[big], produced_on=[None],
                             callback=None, deadline_t=batch_deadline,
-                            dispatch_key=(dag_name, node.name,
-                                          next(_req_ids)))
+                            dispatch_key=(dag_name, node.name, bid))
 
             # metric series are keyed by (dag, node) so two DAGs sharing a
             # node name don't interleave their histograms (generations of
@@ -644,14 +793,43 @@ class Runtime:
                 else f"batch/{node.name}"
 
             def demux(result, error, exec_id):
-                lat = time.perf_counter() - t_submit
+                t_done = _mono()
+                lat = t_done - t_submit
                 self.record_metric(f"{mkey}/size", len(big.rows))
                 self.record_metric(f"{mkey}/latency_s", lat)
                 if item.exec_s is not None:
                     self.record_metric(f"{mkey}/exec_s",
                                        item.exec_s)
+                if traced:
+                    # ONE batch-level span held by the tracer; every
+                    # member's exec span links to it via `bid`
+                    log = list(item.attempt_log)
+                    base = _attempt_attrs(log)
+                    done_e = None
+                    for e in log:
+                        if e[0] == "done" and e[1] == exec_id:
+                            done_e = e
+                    if done_e is not None:
+                        base["queue_s"] = done_e[3]
+                        base["exec_s"] = done_e[4]
+                        if done_e[5]:
+                            base["copies"] = done_e[5]
+                    if error is not None:
+                        base["error"] = type(error).__name__
+                    for trc in traced:
+                        _trace_exec_events(trc, node.name, log)
+                        trc.span(f"exec@{node.name}", t_submit, t_done,
+                                 link=bid, executor=exec_id,
+                                 batch=len(big.rows), **base)
+                    buckets = node.batch_buckets or DEFAULT_BUCKETS
+                    self.tracer.record_batch(
+                        node.name, t_submit, t_done, bid,
+                        dag=dag_name, size=len(big.rows),
+                        n_requests=len(live),
+                        bucket=bucket_rows(len(big.rows), buckets),
+                        reordered=reordered, executor=exec_id)
                 if error is not None:
-                    for _, _, cb, _, _ in live:
+                    for _, _, cb, _, _, _ in live:
                         cb(None, error, exec_id)
                     return
                 if isinstance(result, DeviceTable):
@@ -663,10 +841,11 @@ class Runtime:
                     # cached shapes.  No host copy happens here.
                     buckets = node.batch_buckets or DEFAULT_BUCKETS
                     pos = 0
-                    for ts, _, cb, _, _ in live:
+                    for ts, _, cb, _, c, _ in live:
                         k = sum(len(t.rows) for t in ts)
                         span = range(pos, pos + k)
                         pos += k
+                        t_d0 = _mono()
                         try:
                             if k == 0:
                                 part: Any = Table(result.schema,
@@ -686,6 +865,9 @@ class Runtime:
                                 # consumer — donating it would delete
                                 # buffers a sibling still needs
                                 part.donatable = result.donatable
+                            if c is not None and c.trace is not None:
+                                c.trace.span(f"demux@{node.name}", t_d0,
+                                             _mono(), rows=k, device=True)
                             cb(part, None, exec_id)
                         except BaseException as e:
                             try:
@@ -704,7 +886,8 @@ class Runtime:
                     for r in result.rows:
                         by_id.setdefault(r.row_id, []).append(r)
                 pos = 0
-                for ts, _, cb, _, _ in live:
+                for ts, _, cb, _, c, _ in live:
+                    t_d0 = _mono()
                     out_rows = []
                     for t in ts:
                         for r0 in t.rows:
@@ -715,6 +898,10 @@ class Runtime:
                                 bucket = by_id.get(r0.row_id)
                                 if bucket:
                                     out_rows.append(bucket.pop(0))
+                    if c is not None and c.trace is not None:
+                        c.trace.span(f"demux@{node.name}", t_d0, _mono(),
+                                     rows=len(out_rows),
+                                     positional=positional)
                     try:
                         cb(result.with_rows(out_rows), None, exec_id)
                     except BaseException as e:
@@ -727,10 +914,10 @@ class Runtime:
             item.callback = demux
             # retry/hedge budget from any member context (members of a
             # merged batch share the node's class and similar deadlines)
-            ctx0 = next((c for _, _, _, _, c in live if c is not None),
+            ctx0 = next((c for _, _, _, _, c, _ in live if c is not None),
                         None)
             self._submit_resilient(node, ex, item, ctx0,
-                                   dag_name=dag_name)
+                                   dag_name=dag_name, traces=traced)
             return [None] * len(arg_list)
 
         return batched
@@ -764,12 +951,20 @@ class Runtime:
         # generation that was live at arrival, even if a blue/green swap
         # lands mid-flight
         dag = self.dags[name]
-        t0 = time.perf_counter()
+        t0 = _mono()
+        # the trace exists BEFORE the admission decision so a shed
+        # request still has a (kept) trace saying why it never ran
+        tr = self.tracer.start(name, klass or "interactive", t0)
         ctx: Optional[RequestContext] = None
         adm = self._admission.get(name)
         if adm is not None:
             d = adm.admit(klass, deadline_s)
             kname = d.klass
+            if tr is not None:
+                tr.klass = kname
+                tr.span("admission", t0, _mono(), action=d.action,
+                        reason=d.reason, klass=kname,
+                        estimate_s=d.estimate_s)
             if deadline_s is None:
                 deadline_s = d.deadline_s
             if not d.admitted:
@@ -778,9 +973,11 @@ class Runtime:
                 # protecting itself.  Sheds get their OWN series (NOT
                 # error_t): the controller must distinguish "overloaded
                 # and shedding by design" from "failing".
-                now = time.perf_counter()
+                now = _mono()
                 self.record_metric(f"dag/{name}/shed_t", now)
                 self.record_metric(f"admission/{name}/{kname}/shed_t", now)
+                if tr is not None:
+                    tr.finish(shed=True, shed_reason=d.reason)
                 fut = Future()
                 fut.set_exception(Overloaded(
                     f"{name}: {kname} request shed ({d.reason})",
@@ -789,13 +986,21 @@ class Runtime:
                 return fut
             if d.action == "degrade":
                 self.record_metric(f"admission/{name}/{kname}/degraded_t",
-                                   time.perf_counter())
+                                   _mono())
             ctx = RequestContext(klass=kname, degrade=d.degrade)
-        if ctx is None and (deadline_s is not None or klass is not None):
+        elif tr is not None:
+            # no gate installed: a zero-cost marker so every exported
+            # trace starts with its admission decision
+            tr.span("admission", t0, t0, action="admit", reason="no_gate")
+        if ctx is None and (deadline_s is not None or klass is not None
+                            or tr is not None):
             ctx = RequestContext(klass=klass or "interactive")
         if ctx is not None and deadline_s is not None:
             ctx.deadline_s = deadline_s
             ctx.deadline_t = t0 + deadline_s
+        if ctx is not None and tr is not None:
+            ctx.trace = tr
+            tr.deadline_s = deadline_s
         return self.call_dag_object(dag, table, record=True, ctx=ctx)
 
     def call_dag_object(self, dag: RuntimeDag, table: Table, *,
@@ -807,13 +1012,14 @@ class Runtime:
         ``record=False`` keeps synthetic requests out of the
         ``dag/<name>/…`` series the SLO controller measures."""
         fut: Future = Future()
-        t0 = time.perf_counter()
+        t0 = _mono()
         # every request gets a context with a unique id: (req_id, node)
         # is the dispatch key that makes redispatched KVS writes
         # idempotent and completions exactly-once
         if ctx is None:
             ctx = RequestContext()
         ctx.req_id = next(_req_ids)
+        tr = ctx.trace
         if record:
             name = dag.name
             # arrival + end-to-end latency series: what the SLO
@@ -822,7 +1028,7 @@ class Runtime:
             self.record_metric(f"dag/{name}/request_t", t0)
 
             def _record(f: Future):
-                lat = time.perf_counter() - t0
+                lat = _mono() - t0
                 try:
                     exc = f.exception()
                 except BaseException as e:
@@ -833,12 +1039,10 @@ class Runtime:
                     # admitted but its deadline passed in a queue: an
                     # EXPIRY, not an error — the request failed fast by
                     # design, in a fraction of its budget
-                    self.record_metric(f"dag/{name}/expired_t",
-                                       time.perf_counter())
+                    self.record_metric(f"dag/{name}/expired_t", _mono())
                     self.record_metric(f"dag/{name}/shed_latency_s", lat)
                 elif isinstance(exc, Overloaded):
-                    self.record_metric(f"dag/{name}/shed_t",
-                                       time.perf_counter())
+                    self.record_metric(f"dag/{name}/shed_t", _mono())
                     self.record_metric(f"dag/{name}/shed_latency_s", lat)
                 else:
                     # error-path latency goes to its OWN series plus an
@@ -849,8 +1053,22 @@ class Runtime:
                     # makes the measured p99 improve exactly when the
                     # system degrades.
                     self.record_metric(f"dag/{name}/error_latency_s", lat)
-                    self.record_metric(f"dag/{name}/error_t",
-                                       time.perf_counter())
+                    self.record_metric(f"dag/{name}/error_t", _mono())
+                if tr is not None:
+                    # tail-based keep decision happens here, with the
+                    # request's true outcome in hand
+                    if exc is None:
+                        miss = (tr.deadline_s is not None
+                                and lat > tr.deadline_s)
+                        tr.finish(slo_miss=miss)
+                    elif isinstance(exc, DeadlineExceeded):
+                        tr.finish(slo_miss=True, shed=True,
+                                  shed_reason="expired")
+                    elif isinstance(exc, Overloaded):
+                        tr.finish(shed=True,
+                                  shed_reason=getattr(exc, "reason", None))
+                    else:
+                        tr.finish(error=exc)
             fut.add_done_callback(_record)
         self._track_execution(dag, fut)
         _DagExecution(self, dag, table, fut, ctx).start()
@@ -879,7 +1097,7 @@ class _DagExecution:
         # competitive groups already dispatched for a degraded request
         # (one replica each instead of racing all of them)
         self._groups_fired: set = set()
-        self.t0 = time.perf_counter()
+        self.t0 = _mono()
 
     def start(self):
         self._advance()
@@ -891,7 +1109,7 @@ class _DagExecution:
         ctx = self.ctx
         if ctx is None or ctx.deadline_t is None:
             return False
-        if ctx.deadline_t > time.perf_counter():
+        if ctx.deadline_t > _mono():
             return False
         if not self.fut.done():
             self.fut.set_exception(DeadlineExceeded(

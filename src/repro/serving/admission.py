@@ -41,10 +41,10 @@ from __future__ import annotations
 import collections
 import dataclasses
 import threading
-import time
 from typing import Deque, Dict, Optional, Tuple
 
 from repro.core.lowering import DegradePolicy
+from repro.obs.clock import now as _mono
 
 
 class Overloaded(RuntimeError):
@@ -82,14 +82,14 @@ class TokenBucket:
         self.burst = float(burst if burst is not None else
                            max(self.rate, 1.0))
         self._tokens = self.burst
-        self._t = time.perf_counter()
+        self._t = _mono()
         self._lock = threading.Lock()
 
     def try_take(self, n: float = 1.0) -> bool:
         if self.rate <= 0:
             return True
         with self._lock:
-            now = time.perf_counter()
+            now = _mono()
             self._tokens = min(self.burst,
                                self._tokens + (now - self._t) * self.rate)
             self._t = now
@@ -308,7 +308,7 @@ class AdmissionController:
               deadline_s: Optional[float] = None) -> Decision:
         """Decide one offered request.  Never raises — the caller turns a
         shed Decision into a typed :class:`Overloaded` failure."""
-        now = time.perf_counter()
+        now = _mono()
         pol = self.policy(klass)
         name = pol.name
         if deadline_s is None:
@@ -352,7 +352,7 @@ class AdmissionController:
         whether there is headroom for it.  False suppresses the hedge —
         under overload a backup dispatch only amplifies the queue the
         primary is already stuck in."""
-        now = time.perf_counter()
+        now = _mono()
         pol = self.policy(klass)
         name = pol.name
         with self._lock:

@@ -98,6 +98,12 @@ class Batcher:
         self._last_submit_t: Optional[float] = None
         #: items failed before dispatch because their deadline passed
         self.expired = 0
+        #: batches whose members were EDF-reordered out of arrival order
+        self.reorders = 0
+        #: whether the batch currently being flushed was EDF-reordered —
+        #: written by the flush thread just before it invokes ``fn``, read
+        #: by the batch fn (same thread) to annotate the batch-level span
+        self.last_reordered = False
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
         self.batch_sizes: List[int] = []
@@ -261,12 +267,18 @@ class Batcher:
                     deadline_s=it.deadline_t))
             else:
                 live.append(it)
+        reordered = False
         if any(it.deadline_t is not None for it in live):
             # earliest deadline first; deadline-less items ride behind in
             # arrival order (sort is stable).  Plain FIFO traffic never
             # reaches this sort.
+            before = list(live)
             live.sort(key=lambda it: (it.deadline_t is None,
                                       it.deadline_t or 0.0))
+            reordered = live != before
+            if reordered:
+                self.reorders += 1
+        self.last_reordered = reordered
         self._backlog = live[self.max_batch:]
         return live[:self.max_batch]
 

@@ -36,6 +36,8 @@ import random
 import threading
 from typing import Optional
 
+from repro.obs.clock import now as _mono
+
 
 class Transient(RuntimeError):
     """An attempt-scoped failure: redispatch to another replica is
@@ -119,12 +121,15 @@ class CompletionToken:
     winner delivers the callback; crash-requeues, hedges, and stragglers
     that lose the race fall silent."""
 
-    __slots__ = ("_lock", "_claimed", "winner")
+    __slots__ = ("_lock", "_claimed", "winner", "claimed_t")
 
     def __init__(self):
         self._lock = threading.Lock()
         self._claimed = False
         self.winner: Optional[str] = None
+        # monotonic time of the winning claim — attribution reads it to
+        # split an exec span at the moment the result actually existed
+        self.claimed_t: Optional[float] = None
 
     @property
     def claimed(self) -> bool:
@@ -136,4 +141,5 @@ class CompletionToken:
                 return False
             self._claimed = True
             self.winner = who
+            self.claimed_t = _mono()
             return True
