@@ -15,19 +15,32 @@ from repro.runtime.netmodel import NetModel
 from repro.runtime.runtime import Runtime
 
 
+def _fast(x: int) -> int:
+    return x
+
+
+def _slow(x: int) -> int:
+    time.sleep(0.02)
+    return x
+
+
+def _build_flow():
+    fl = Dataflow([("x", int)])
+    fl.output = fl.map(_slow, names=["x"]).map(_fast, names=["x"])
+    return fl
+
+
+def check_flows():
+    """Static-verifier hook (``python -m repro.check``)."""
+    return [{"name": "autoscaling", "flow": _build_flow(),
+             "compile": {}, "sample": Table([("x", int)], [(1,)])}]
+
+
 def run(duration_s: float = 12.0):
-    def fast(x: int) -> int:
-        return x
-
-    def slow(x: int) -> int:
-        time.sleep(0.02)
-        return x
-
     rt = Runtime(n_cpu=2, net=NetModel(scale=0.0))
     rows = []
     try:
-        fl = Dataflow([("x", int)])
-        fl.output = fl.map(slow, names=["x"]).map(fast, names=["x"])
+        fl = _build_flow()
         dep = fl.deploy(rt)
         order = dep.dag.topo()           # slow map is first in topo order
         slow_fn, fast_fn = order[0].name, order[1].name

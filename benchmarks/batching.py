@@ -267,28 +267,29 @@ def _keep_positive(x: jax.Array) -> bool:
     return x.sum() > 0
 
 
+def _filter_flow():
+    from repro.core.dataflow import Dataflow
+    fl = Dataflow([("x", jax.Array)])
+    fl.output = fl.map(_f1, names=["x"], gpu=True) \
+        .filter(_keep_positive, gpu=True) \
+        .map(_f2, names=["x"], gpu=True)
+    return fl
+
+
 def _filter_in_jit(dim: int = 128, n_rows: int = 12):
     """A Filter-containing chain lowers to ONE vmapped dispatch (mask
     carried as a device column) and must match the interpreted path
     exactly — rows, ids, values."""
-    from repro.core.dataflow import Dataflow
     from repro.core.ir import PhysicalPlan
     from repro.core.passes import build_pipeline
     from repro.core.table import Table
 
-    def flow():
-        fl = Dataflow([("x", jax.Array)])
-        fl.output = fl.map(_f1, names=["x"], gpu=True) \
-            .filter(_keep_positive, gpu=True) \
-            .map(_f2, names=["x"], gpu=True)
-        return fl
-
     plan = build_pipeline(fusion=True).run(
-        PhysicalPlan.from_dataflow(flow()))
+        PhysicalPlan.from_dataflow(_filter_flow()))
     op = plan.ops[0].op
     op.adaptive_routing = False
     interp = build_pipeline(fusion=True, jit_fusion=False).run(
-        PhysicalPlan.from_dataflow(flow()))
+        PhysicalPlan.from_dataflow(_filter_flow()))
     xs = jnp.linspace(-1.0, 1.0, dim)
     # half the rows fail the predicate
     t = Table([("x", jax.Array)],
@@ -421,3 +422,17 @@ def run(n_requests: int = 48, json_path: Optional[str] = None):
             json.dump(report, f, indent=2, sort_keys=True)
         print(f"# wrote {json_path}")
     return rows
+
+
+def check_flows():
+    """Static-verifier hook (``python -m repro.check``): the batched
+    chain (bucket sweep) and the filter-in-jit chain (CF104 lint)."""
+    from repro.core.table import Table
+    sample = Table([("x", jax.Array)],
+                   [(jnp.zeros(64, jnp.float32),)])
+    return [
+        {"name": "batching-chain", "flow": _chain_flow(),
+         "compile": {"fusion": True}, "sample": sample, "max_batch": 8},
+        {"name": "batching-filter", "flow": _filter_flow(),
+         "compile": {"fusion": True}, "sample": sample},
+    ]

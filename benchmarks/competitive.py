@@ -58,3 +58,10 @@ def run(n_requests: int = 40):
             rows.append(row(f"competitive/{label}var/r{replicas}", ls,
                             derived))
     return rows
+
+
+def check_flows():
+    """Static-verifier hook (``python -m repro.check``)."""
+    return [{"name": "competitive", "flow": _flow(4.0, 3),
+             "compile": {"competitive_exec": True},
+             "sample": Table([("x", int)], [(1,)])}]

@@ -334,3 +334,10 @@ def run(duration_s: float = 2.5,
     finally:
         rt.stop()
         time.sleep(0.3)
+
+
+def check_flows():
+    """Static-verifier hook (``python -m repro.check``)."""
+    return [{"name": "faults", "flow": _build_flow(),
+             "compile": {"fusion": True}, "sample": _sample(),
+             "max_batch": MAX_BATCH}]

@@ -97,3 +97,16 @@ def run(n_requests: int = 12):
                 f"fusion/len{length}/{size_kb}KB/fused", lats[True],
                 f"speedup={speed:.2f}x"))
     return rows
+
+
+def check_flows():
+    """Static-verifier hook (``python -m repro.check``)."""
+    return [
+        {"name": "fusion-chain", "flow": _chain_flow(6),
+         "compile": {"fusion": True},
+         "sample": Table([("x", np.ndarray)], [(np.zeros(64),)])},
+        {"name": "fusion-jax-chain", "flow": _jax_chain_flow(6),
+         "compile": {"fusion": True},
+         "sample": Table([("x", jax.Array)],
+                         [(jnp.zeros(64, jnp.float32),)])},
+    ]

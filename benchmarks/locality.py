@@ -59,3 +59,10 @@ def run(n_requests: int = 30):
                 f"locality/{size_kb}KB/{mode}", ls,
                 f"speedup={base / percentile(ls, 50):.2f}x"))
     return rows
+
+
+def check_flows():
+    """Static-verifier hook (``python -m repro.check``)."""
+    return [{"name": "locality", "flow": _flow(),
+             "compile": {"fusion": True, "locality": True},
+             "sample": Table([("i", int)], [(1,)])}]

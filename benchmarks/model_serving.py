@@ -268,3 +268,13 @@ def run(n_requests: int = 30,
             f"ref={kernel['ref_step_us']:.0f}us "
             f"shape={kernel['shape']} interpret-mode"),
     ]
+
+
+def check_flows():
+    """Static-verifier hook (``python -m repro.check``): the kernel flow
+    exercises the CF103 tile lint against real inferred operand shapes."""
+    from repro.kernels import ops as kops
+    step = kops.kernel_step("flash_attention", causal=True,
+                            block_q=32, block_k=32)
+    return [{"name": "kernel-serving", "flow": _kernel_flow(step),
+             "compile": {"fusion": True}, "sample": _kernel_table(2)}]

@@ -184,3 +184,11 @@ def run(n_requests: int = 200,
         with open(json_path, "w") as f:
             json.dump(doc, f, indent=2)
     return rows
+
+
+def check_flows():
+    """Static-verifier hook (``python -m repro.check``)."""
+    from repro.core.table import Table
+    return [{"name": "observability", "flow": _chain("check"),
+             "compile": {"fusion": True},
+             "sample": Table([("i", int)], [(1,)])}]

@@ -349,3 +349,10 @@ def run(duration_s: float = 2.5,
     finally:
         rt.stop()
         time.sleep(0.3)
+
+
+def check_flows():
+    """Static-verifier hook (``python -m repro.check``)."""
+    return [{"name": "overload", "flow": _build_flow(),
+             "compile": {"fusion": True}, "sample": _sample(),
+             "max_batch": 4}]

@@ -260,3 +260,10 @@ def run(duration_s: float = 8.0, rate_hz: float = 100.0,
     finally:
         rt.stop()
         time.sleep(0.3)
+
+
+def check_flows():
+    """Static-verifier hook (``python -m repro.check``)."""
+    return [{"name": "replan", "flow": _build_flow(),
+             "compile": {"fusion": True, "batched_lowering": False},
+             "sample": _sample()}]

@@ -247,3 +247,10 @@ def run(n_requests: int = 150, rates=(60.0, 120.0, 170.0),
         with open(json_path, "w") as f:
             json.dump(report, f, indent=1, sort_keys=True)
     return rows
+
+
+def check_flows():
+    """Static-verifier hook (``python -m repro.check``)."""
+    return [{"name": "slo-planner", "flow": _build_flow(),
+             "compile": {"fusion": True}, "sample": _sample(),
+             "max_batch": 10}]

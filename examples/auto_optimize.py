@@ -17,7 +17,7 @@ from repro.core.table import Table
 from repro.runtime import NetModel, Runtime
 
 
-def main():
+def build_flow():
     rng = random.Random(0)
 
     def preproc(x: np.ndarray) -> np.ndarray:
@@ -34,7 +34,19 @@ def main():
     fl.output = (fl.map(preproc, names=["x"])
                  .map(jittery_model, names=["mean", "conf"])
                  .map(postproc, names=["label"]))
+    return fl
 
+
+def check_flows():
+    """Static-verifier hook (``python -m repro.check``): lint under the
+    planner's richest flag set (fusion on)."""
+    return [{"name": "auto-optimize", "flow": build_flow(),
+             "compile": {"fusion": True},
+             "sample": Table([("x", np.ndarray)], [(np.ones(1024),)])}]
+
+
+def main():
+    fl = build_flow()
     rt = Runtime(n_cpu=8, net=NetModel())
     sample = Table([("x", np.ndarray)], [(np.ones(64 * 1024),)])
 

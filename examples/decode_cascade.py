@@ -47,13 +47,29 @@ def build_ops(*, arch=ARCH, seq_len=SEQ, cache_len=CACHE, measure=True):
     return model, params, pre, dec
 
 
-def build(rt, pre, dec, *, steps=STEPS, name="decode-cascade"):
+def build_flow(pre, dec, *, steps=STEPS):
     fl = Dataflow([("tokens", jax.Array)])
     node = fl.apply_op(pre, gpu=True)
     for _ in range(steps):
         node = node.apply_op(dec, gpu=True)
     fl.output = node
-    return compile_flow(fl, rt, fusion=True, name=name)
+    return fl
+
+
+def build(rt, pre, dec, *, steps=STEPS, name="decode-cascade"):
+    return compile_flow(build_flow(pre, dec, steps=steps), rt,
+                        fusion=True, name=name)
+
+
+def check_flows():
+    """Static-verifier hook (``python -m repro.check``)."""
+    from repro.models.registry import stage_input_specs
+    model, _params, pre, dec = build_ops(measure=False)
+    return [{"name": "decode-cascade", "flow": build_flow(pre, dec),
+             "compile": {"fusion": True},
+             "input_specs": stage_input_specs(model, "prefill",
+                                              seq_len=SEQ,
+                                              cache_len=CACHE)}]
 
 
 def reference_decode(model, params, toks, *, steps=STEPS, cache_len=CACHE):

@@ -43,10 +43,8 @@ def _forward(arch, seed, temp):
     return probs, cfg.vocab_size
 
 
-def build(rt, *, name="cascade"):
-    simple_fwd, v = _forward("yi-9b", 0, temp=1.0)
-    complex_fwd, _ = _forward("granite-34b", 1, temp=0.05)  # sharp
-
+def build_flow(simple_fwd, complex_fwd, v):
+    """The cascade Dataflow over the given per-row forward closures."""
     def gate(tokens: jax.Array) -> jax.Array:
         return jnp.clip(tokens, 0, v - 1)
 
@@ -85,7 +83,24 @@ def build(rt, *, name="cascade"):
     clab = c.map(lab_complex, names=["clabel", "cconf"])
     fl.output = slab.join(clab, how="left").map(best,
                                                 names=["label", "conf"])
-    return compile_flow(fl, rt, fusion=True, name=name)
+    return fl
+
+
+def build(rt, *, name="cascade"):
+    simple_fwd, v = _forward("yi-9b", 0, temp=1.0)
+    complex_fwd, _ = _forward("granite-34b", 1, temp=0.05)  # sharp
+    return compile_flow(build_flow(simple_fwd, complex_fwd, v), rt,
+                        fusion=True, name=name)
+
+
+def check_flows():
+    """Static-verifier hook (``python -m repro.check``): one tiny model
+    stands in for both cascade stages — the flow shape is identical."""
+    fwd, v = _forward("yi-9b", 0, temp=1.0)
+    toks = jnp.zeros((SEQ,), jnp.int32)
+    return [{"name": "cascade", "flow": build_flow(fwd, fwd, v),
+             "compile": {"fusion": True},
+             "sample": Table([("tokens", jax.Array)], [(toks,)])}]
 
 
 def run(images: int = 6, *, verbose: bool = False):

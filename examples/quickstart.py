@@ -34,22 +34,31 @@ def load_model(arch: str, seed: int):
     return predict
 
 
-def main():
-    m1 = load_model("yi-9b", 0)
-    m2 = load_model("glm4-9b", 1)
-    m3 = load_model("gemma2-9b", 2)
-
+def build_flow(models):
+    """The Figure-1 ensemble dataflow over the given predict closures."""
     def preproc(url: str) -> np.ndarray:
         return (np.frombuffer(url.encode()[:16].ljust(16), np.uint8)
                 .astype(np.int32) % 500)
 
-    # --- the Figure-1 dataflow -------------------------------------------
     fl = Dataflow([("url", str)])
     img = fl.map(preproc, names=["tokens"])
-    p1 = img.map(m1, names=["label", "conf"])
-    p2 = img.map(m2, names=["label", "conf"])
-    p3 = img.map(m3, names=["label", "conf"])
-    fl.output = p1.union(p2, p3).agg("max", "conf")
+    preds = [img.map(m, names=["label", "conf"]) for m in models]
+    fl.output = preds[0].union(*preds[1:]).agg("max", "conf")
+    return fl
+
+
+def check_flows():
+    """Static-verifier hook (``python -m repro.check``): lint the real
+    flow shape; one tiny model stands in for all three ensemble heads."""
+    m = load_model("yi-9b", 0)
+    return [{"name": "quickstart", "flow": build_flow([m, m, m]),
+             "compile": {"fusion": True},
+             "sample": Table([("url", str)], [("img://cat.jpg",)])}]
+
+
+def main():
+    fl = build_flow([load_model("yi-9b", 0), load_model("glm4-9b", 1),
+                     load_model("gemma2-9b", 2)])
 
     rt = Runtime(n_cpu=4, net=NetModel(scale=0.0))
     fl.deploy(rt, fusion=True)

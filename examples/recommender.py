@@ -34,6 +34,17 @@ def build_flow():
     return fl
 
 
+def check_flows():
+    """Static-verifier hook (``python -m repro.check``): lint both the
+    optimized (fusion + locality) and per-stage deployments."""
+    sample = Table([("user", int), ("clicks", int)], [(1, 7)])
+    return [{"name": "recommender", "flow": build_flow(),
+             "compile": {"fusion": True, "locality": True},
+             "sample": sample},
+            {"name": "recommender-unopt", "flow": build_flow(),
+             "compile": {}, "sample": sample}]
+
+
 def run(optimized: bool):
     rt = Runtime(n_cpu=4, net=NetModel(latency_s=0.5e-3, bandwidth=1e9))
     try:

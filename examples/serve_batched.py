@@ -12,6 +12,14 @@ from repro.launch.serve import build_flow
 from repro.runtime import NetModel, Runtime
 
 
+def check_flows():
+    """Static-verifier hook (``python -m repro.check``)."""
+    flow, _engine = build_flow("yi-9b", max_new_tokens=2, batching=True)
+    return [{"name": "serve-batched", "flow": flow,
+             "compile": {"fusion": False},
+             "sample": Table([("text", str)], [("request 0",)])}]
+
+
 def main():
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="yi-9b")

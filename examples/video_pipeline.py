@@ -33,8 +33,8 @@ from repro.runtime import NetModel, Runtime
 SEQ = 16
 
 
-def build(rt, *, name="video"):
-    """Compile the pipeline onto ``rt``; returns the deployed flow."""
+def build_flow():
+    """The video Dataflow (detector ModelOp + two classifier heads)."""
     cfg = get_tiny_config("llama-3.2-vision-11b")   # detector stand-in
     detector = build_model(cfg)
     params = detector.init(jax.random.PRNGKey(0))
@@ -76,11 +76,24 @@ def build(rt, *, name="video"):
     la = pa.map(label_people, names=["label", "conf"])
     lb = pb.map(label_vehicle, names=["label", "conf"])
     fl.output = la.union(lb).groupby("label").agg("count", "label")
-    return compile_flow(fl, rt, fusion=True, name=name)
+    return fl
+
+
+def build(rt, *, name="video"):
+    """Compile the pipeline onto ``rt``; returns the deployed flow."""
+    return compile_flow(build_flow(), rt, fusion=True, name=name)
 
 
 def _frame(rng, v=500):
     return (jnp.asarray(rng.integers(0, v, SEQ), jnp.int32),)
+
+
+def check_flows():
+    """Static-verifier hook (``python -m repro.check``)."""
+    rng = np.random.default_rng(0)
+    return [{"name": "video", "flow": build_flow(),
+             "compile": {"fusion": True},
+             "sample": Table([("tokens", jax.Array)], [_frame(rng)])}]
 
 
 def run(frames: int = 4, *, controller: bool = True, verbose: bool = False):

@@ -1,0 +1,6 @@
+"""``python -m repro.check`` — the static plan linter's CLI package.
+
+The implementation lives in :mod:`repro.analysis.cli`; this package
+exists so the linter has a short, stable invocation name.
+"""
+from repro.analysis.cli import main  # noqa: F401

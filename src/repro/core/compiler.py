@@ -37,7 +37,10 @@ def compile_flow(flow: Dataflow, runtime, *, fusion: bool = False,
                  pipeline: Optional[PassPipeline] = None,
                  plan_config=None,
                  name: Optional[str] = None,
-                 register: bool = True) -> "DeployedFlow":
+                 register: bool = True,
+                 verify=None,
+                 verify_input=None,
+                 verify_budget_bytes: Optional[int] = None) -> "DeployedFlow":
     """Compile + register ``flow``.  Pass either optimization flags (mapped
     to a pass configuration via ``build_pipeline``) or an explicit
     ``pipeline``.  ``plan_config`` (a ``repro.profiling.optimizer``
@@ -50,7 +53,17 @@ def compile_flow(flow: Dataflow, runtime, *, fusion: bool = False,
     traffic routes to it and any live deployment under ``name`` is
     untouched — the blue/green replanner's green-compile step.  The caller
     activates it later with ``runtime.register_dag(dep.dag, plan=dep.plan)``
-    and applies the plan-config's runtime knobs after the swap."""
+    and applies the plan-config's runtime knobs after the swap.
+
+    ``verify`` runs the static plan verifier (``repro.analysis``) over
+    the optimized plan BEFORE the DAG is registered or any XLA trace
+    happens: ``True``/``"error"`` raises ``VerificationError`` on any
+    severity=error diagnostic; ``"warn"`` only attaches the report
+    (``DeployedFlow.verification``); ``None``/``False`` skips analysis.
+    ``verify_input`` (a sample request ``Table`` or a ``{column:
+    ShapeDtypeStruct}`` dict) enables shape/dtype/kernel-tile/memory
+    inference; ``verify_budget_bytes`` overrides the device-memory
+    budget (default: the runtime pool's cache budget)."""
     flow.typecheck()
     plan = PhysicalPlan.from_dataflow(flow)
     # remember the flag set (None under an explicit pipeline): a replan
@@ -73,6 +86,21 @@ def compile_flow(flow: Dataflow, runtime, *, fusion: bool = False,
     ctx = PassContext()
     plan = pipeline.run(plan, ctx)
     dag_name = name or f"flow{next(_flow_ids)}"
+    verification = None
+    if verify:
+        # verify BEFORE register/prepare: jit tracing is lazy, so raising
+        # here guarantees a rejected plan never reaches XLA or traffic
+        from repro.analysis import VerificationError, analyze
+        from repro.core.table import Table as _Table
+        sample = verify_input if isinstance(verify_input, _Table) else None
+        specs = verify_input if isinstance(verify_input, dict) else None
+        verification = analyze(
+            plan, runtime=runtime, plan_config=plan_config,
+            sample=sample, input_specs=specs,
+            budget_bytes=verify_budget_bytes, name=dag_name)
+        if verify != "warn" and not verification.ok:
+            raise VerificationError(verification,
+                                    context=f"compile of {dag_name!r}")
     if register:
         dag = runtime.register_plan(plan, dag_name)
     else:
@@ -80,6 +108,7 @@ def compile_flow(flow: Dataflow, runtime, *, fusion: bool = False,
         runtime.prepare_dag(dag)
     deployed = DeployedFlow(flow, plan, dag, runtime, ctx.trace)
     deployed.compile_flags = compile_flags
+    deployed.verification = verification
     if plan_config is not None and register:
         plan_config.apply_runtime(runtime, dag)
     return deployed
@@ -97,6 +126,9 @@ class DeployedFlow:
         #: when an explicit pipeline was passed) — what a blue/green
         #: recompile must reuse for op-id-stable PlanConfig application
         self.compile_flags: Optional[dict] = None
+        #: the static verifier's Report when compiled with ``verify=``
+        #: (None when verification was skipped)
+        self.verification = None
 
     @property
     def rewritten(self) -> Dataflow:

@@ -62,6 +62,12 @@ class PhysicalOp:
     # PlaceKernelsPass): repr strings of the KernelCalls, for explain
     # output and tests — the executable identity lives in the step fns
     kernels: Tuple[str, ...] = ()
+    # buffer-donation intent for this op's device-resident output edge:
+    # None derives the runtime's safe default (donate only single-
+    # consumer device edges); True forces donation (audited by the
+    # static verifier — donating a fan-out edge deletes buffers a
+    # sibling consumer still needs); False forbids it
+    donate: Optional[bool] = None
 
     def replace(self, **kw) -> "PhysicalOp":
         return dataclasses.replace(self, **kw)
@@ -82,6 +88,8 @@ class PhysicalOp:
             flags.append("dev")
         if self.kernels:
             flags.append(f"pallas:{','.join(k.split('(')[0] for k in self.kernels)}")
+        if self.donate is not None:
+            flags.append("donate" if self.donate else "nodonate")
         if self.wait_any:
             flags.append("any")
         if self.replicas:

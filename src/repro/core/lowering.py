@@ -87,6 +87,15 @@ def _array_annotation(t) -> bool:
     return any(t is a for a in _ARRAY_TYPES)
 
 
+def array_annotation(t) -> bool:
+    """Is ``t`` an array annotation for lowering purposes?  Public name
+    for the eligibility test ``map_is_jax_lowerable``/
+    ``filter_is_jax_lowerable`` apply per argument — the static verifier
+    (``repro.analysis``) gates abstract interpretation on the same
+    predicate so the two can never disagree about what lowers."""
+    return _array_annotation(t)
+
+
 def map_is_jax_lowerable(m: ops.Operator) -> bool:
     """A ``Map`` whose argument and return annotations are all arrays.
     ``m._schema`` already holds the expanded return types (tuple returns

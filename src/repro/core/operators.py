@@ -170,8 +170,8 @@ class Filter(Operator):
     fn: Callable
 
     def __post_init__(self):
-        self._arg_types, ret = fn_signature(self.fn)
-        if ret not in (bool, None):
+        self._arg_types, self._ret = fn_signature(self.fn)
+        if self._ret not in (bool, None):
             raise TypecheckError("filter function must return bool")
 
     def out_schema(self, in_schemas):

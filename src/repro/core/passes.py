@@ -75,11 +75,21 @@ class Pass(Protocol):
 
 
 class PassPipeline:
-    """Runs passes in order with post-pass validation + typechecking."""
+    """Runs passes in order with post-pass validation + typechecking.
 
-    def __init__(self, passes: List[Pass], *, validate: bool = True):
+    ``verify=True`` turns the pass suite into a differentially checked
+    compiler: the static verifier's structural checks run between every
+    pass, and a pass that introduces new error diagnostics (CF501) or
+    changes the inferred per-edge types of surviving ops (CF502) fails
+    the compile with a :class:`repro.analysis.VerificationError` naming
+    the offending pass — instead of shipping a silently miscompiled plan
+    to the runtime."""
+
+    def __init__(self, passes: List[Pass], *, validate: bool = True,
+                 verify: bool = False):
         self.passes = list(passes)
         self.validate = validate
+        self.verify = verify
 
     def run(self, plan: PhysicalPlan,
             ctx: Optional[PassContext] = None) -> PhysicalPlan:
@@ -87,6 +97,10 @@ class PassPipeline:
         if self.validate:
             plan.validate()
             plan.typecheck()
+        snapshot = None
+        if self.verify:
+            from repro.analysis import pass_snapshot
+            snapshot = pass_snapshot(plan)
         for p in self.passes:
             before = len(plan.ops)
             notes_start = len(ctx.notes)
@@ -96,6 +110,9 @@ class PassPipeline:
             if self.validate:
                 plan.validate()
                 plan.typecheck()   # every pass must preserve well-typedness
+            if snapshot is not None:
+                from repro.analysis import verify_pass_step
+                snapshot = verify_pass_step(p.name, plan, snapshot)
             ctx.trace.append(PassTrace(p.name, before, len(plan.ops), dt,
                                        list(ctx.notes[notes_start:])))
         return plan
@@ -448,7 +465,8 @@ def build_pipeline(*, fusion: bool = False, competitive_exec: bool = False,
                    default_replicas: int = 3,
                    plan_config=None,
                    place_kernels: bool = True,
-                   validate: bool = True) -> PassPipeline:
+                   validate: bool = True,
+                   verify: bool = False) -> PassPipeline:
     """Map optimization flags (a planner ``Plan`` or user choices) onto a
     pass configuration.  Order mirrors the paper's rewrite order: locality
     first (lookup fusion feeds dispatch), then replication, then fusion
@@ -490,4 +508,4 @@ def build_pipeline(*, fusion: bool = False, competitive_exec: bool = False,
             lower.bucket_overrides = plan_config.bucket_overrides()
             lower.batched_overrides = plan_config.batched_overrides()
         passes.append(lower)
-    return PassPipeline(passes, validate=validate)
+    return PassPipeline(passes, validate=validate, verify=verify)

@@ -143,6 +143,53 @@ class KernelSpec:
         sem = {k: v for k, v in params.items() if k in self.sem_params}
         return sem, dict(params)
 
+    def check_tiles(self, shapes, params) -> "list":
+        """Static tile validation for the plan verifier (CF103): restate
+        this kernel's call-time divisibility asserts against inferred
+        operand shapes, so a bad block size fails the compile instead of
+        the first dispatch.  ``shapes`` maps operand column -> shape
+        tuple (``None`` skips the shape-dependent rules, leaving only
+        positivity); ``params`` is the placement's param dict or
+        ``KernelCall.params`` pairs.  Returns problem strings; empty
+        means the placement tiles cleanly."""
+        p = dict(params)
+        problems = []
+        for pname, default, arg, dim_idx in _TILE_RULES.get(self.name, ()):
+            val = p.get(pname, default)
+            if not isinstance(val, int) or isinstance(val, bool) \
+                    or val <= 0:
+                problems.append(f"{pname}={val!r} must be a positive int")
+                continue
+            if not shapes or arg not in shapes:
+                continue
+            shape = tuple(shapes[arg])
+            if len(shape) < -dim_idx:
+                problems.append(f"{arg} has rank {len(shape)}, the "
+                                f"{pname} rule tiles dim {dim_idx}")
+                continue
+            dim = shape[dim_idx]
+            eff = min(val, dim)
+            if eff <= 0 or dim % eff:
+                problems.append(
+                    f"{arg}.shape[{dim_idx}]={dim} is not divisible by "
+                    f"effective {pname}=min({val},{dim})={eff}")
+        return problems
+
+
+#: per kernel: (tile param, default, operand column, dim index) — the
+#: divisibility rules the Pallas entry points assert, restated for
+#: static checking.  Dim indexes are NEGATIVE so the same rule covers
+#: both full batched operands ([B,...]) and the verifier's row-level
+#: specs (batch dim stripped).
+_TILE_RULES: Dict[str, Tuple[Tuple[str, int, str, int], ...]] = {
+    "flash_attention": (("block_q", 128, "q", -2),
+                        ("block_k", 128, "q", -2)),
+    "decode_attention": (("block_s", 512, "k_cache", -2),),
+    "wkv6": (("chunk", 64, "r", -3),),
+    "rglru_scan": (("chunk", 128, "a", -2),
+                   ("block_r", 512, "a", -1)),
+}
+
 
 KERNEL_REGISTRY: Dict[str, KernelSpec] = {
     "flash_attention": KernelSpec(
@@ -194,6 +241,13 @@ def match_kernel(fn) -> Optional[KernelCall]:
     if call is not None:
         return call
     return KERNEL_PATTERNS.get(fn)
+
+
+def kernel_call_of(fn) -> Optional[KernelCall]:
+    """The static verifier's probe (same resolution as ``match_kernel``):
+    the ``KernelCall`` behind a step function, whether it is the oracle
+    step or its placed Pallas twin."""
+    return match_kernel(fn)
 
 
 # -- step construction -------------------------------------------------------

@@ -354,3 +354,35 @@ def model_stage_op(model: Model, params, stage: str, *,
     hook = _timing_hook(batched, arg_maker, runs=runs) if measure else None
     return ops.ModelOp(fn=fn, names=names, model_name=model_name,
                        stage=stage, cost_hook=hook)
+
+
+def stage_input_specs(model: Model, stage: str, *, seq_len: int = 32,
+                      cache_len: int = 64) -> Dict[str, Any]:
+    """Row-level input column specs for one serving stage — the
+    ``input_specs`` the static verifier (``repro.analysis``) wants for a
+    flow feeding this stage's op, at the same ``seq_len``/``cache_len``
+    geometry ``model_stage_op`` was built with.  ``logits``/``prefill``
+    consume a token column; ``decode`` consumes the normalized
+    (batch-leading) cache-state columns ``tok``/``pos``/``c{i}``."""
+    i32 = jnp.int32
+    if stage in ("logits", "prefill"):
+        return {"tokens": jax.ShapeDtypeStruct((seq_len,), i32)}
+    if stage != "decode":
+        raise ValueError(f"unknown stage {stage!r} "
+                         "(logits | prefill | decode)")
+    leaves, _ = jax.tree_util.tree_flatten(
+        jax.eval_shape(lambda: model.init_cache(1, cache_len)))
+    leaves_b2, _ = jax.tree_util.tree_flatten(
+        jax.eval_shape(lambda: model.init_cache(2, cache_len)))
+    specs: Dict[str, Any] = {"tok": jax.ShapeDtypeStruct((), i32),
+                             "pos": jax.ShapeDtypeStruct((), i32)}
+    for i, (a, b) in enumerate(zip(leaves, leaves_b2)):
+        diff = [j for j, (x, y) in enumerate(zip(a.shape, b.shape))
+                if x != y]
+        if len(diff) != 1:
+            raise ValueError(
+                f"cannot identify batch axis of cache leaf {a.shape} "
+                f"vs {b.shape}")
+        row = tuple(s for j, s in enumerate(a.shape) if j != diff[0])
+        specs[f"c{i}"] = jax.ShapeDtypeStruct(row, a.dtype)
+    return specs

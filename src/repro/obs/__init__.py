@@ -23,7 +23,11 @@ a human — can answer "why did this request miss its deadline?":
   (monotonic); every ``*_t`` metric series and every window anchor must
   use it, or rates silently window wall-clock values against monotonic
   anchors.
+* :mod:`repro.obs.keys` — the canonical metric-series name registry:
+  every recorded key is built by a formatter here, and the static
+  verifier's CF401 lint checks recorded keys against it.
 """
+from repro.obs import keys
 from repro.obs.attribution import Attribution, NodeBreakdown, attribute
 from repro.obs.clock import now
 from repro.obs.export import (export_chrome, to_chrome_events, to_json,
@@ -32,7 +36,7 @@ from repro.obs.metrics import Histogram, HistogramSnapshot, WindowedCounter
 from repro.obs.trace import Span, Trace, Tracer
 
 __all__ = [
-    "Attribution", "NodeBreakdown", "attribute", "now",
+    "Attribution", "NodeBreakdown", "attribute", "keys", "now",
     "export_chrome", "to_chrome_events", "to_json", "write_chrome",
     "Histogram", "HistogramSnapshot", "WindowedCounter",
     "Span", "Trace", "Tracer",

@@ -7,7 +7,10 @@ node) where the ONE-span-per-merged-batch events live, and flow arrows
 connect each request's ``exec@node`` span to the batch span that served
 it (the ``link`` id).  Timestamps are microseconds relative to the
 earliest exported span, so traces from the process-local monotonic clock
-render at t=0.
+render at t=0.  A third process holds the control-plane track —
+autoscaler replica changes and blue/green swap phases — so a during-swap
+p99 blip in the request tracks lines up against the control event that
+caused it.
 """
 from __future__ import annotations
 
@@ -18,6 +21,7 @@ from repro.obs.trace import Span, Trace
 
 _REQ_PID = 1
 _BATCH_PID = 2
+_CONTROL_PID = 3
 
 
 def to_json(traces: Iterable[Trace], indent: Optional[int] = None) -> str:
@@ -40,12 +44,15 @@ def _clean(attrs: Dict[str, Any]) -> Dict[str, Any]:
 
 
 def to_chrome_events(traces: Sequence[Trace],
-                     batch_spans: Sequence[Span] = ()) \
+                     batch_spans: Sequence[Span] = (),
+                     control_spans: Sequence[Span] = ()) \
         -> List[Dict[str, Any]]:
-    """Flatten traces + batch spans into a chrome://tracing event list."""
+    """Flatten traces + batch spans + control-plane spans into a
+    chrome://tracing event list."""
     events: List[Dict[str, Any]] = []
     all_t0 = [s.t0 for t in traces for s in t.spans] + \
-        [t.t0 for t in traces] + [s.t0 for s in batch_spans]
+        [t.t0 for t in traces] + [s.t0 for s in batch_spans] + \
+        [s.t0 for s in control_spans]
     if not all_t0:
         return events
     base = min(all_t0)
@@ -57,6 +64,10 @@ def to_chrome_events(traces: Sequence[Trace],
                    "args": {"name": "requests"}})
     events.append({"ph": "M", "name": "process_name", "pid": _BATCH_PID,
                    "args": {"name": "batchers"}})
+    if control_spans:
+        events.append({"ph": "M", "name": "process_name",
+                       "pid": _CONTROL_PID,
+                       "args": {"name": "control-plane"}})
 
     node_tids: Dict[str, int] = {}
     for t in traces:
@@ -103,14 +114,37 @@ def to_chrome_events(traces: Sequence[Trace],
             events.append({"ph": "s", "cat": "batch-link", "name": "batch",
                            "id": int(s.link), "pid": _BATCH_PID,
                            "tid": tid, "ts": us(s.t0)})
+    control_tids: Dict[str, int] = {}
+    for s in control_spans:
+        # one thread-track per event kind (replan, scale, ...); a
+        # zero-duration span renders as an instant marker
+        kind = s.kind
+        if kind not in control_tids:
+            control_tids[kind] = 2000 + len(control_tids)
+            events.append({"ph": "M", "name": "thread_name",
+                           "pid": _CONTROL_PID, "tid": control_tids[kind],
+                           "args": {"name": f"control:{kind}"}})
+        tid = control_tids[kind]
+        if s.duration_s > 0.0:
+            events.append({"ph": "X", "name": s.name, "cat": "control",
+                           "pid": _CONTROL_PID, "tid": tid,
+                           "ts": us(s.t0),
+                           "dur": max(0.0, s.duration_s * 1e6),
+                           "args": _clean(s.attrs)})
+        else:
+            events.append({"ph": "i", "name": s.name, "cat": "control",
+                           "pid": _CONTROL_PID, "tid": tid,
+                           "ts": us(s.t0), "s": "g",
+                           "args": _clean(s.attrs)})
     return events
 
 
 def write_chrome(path: str, traces: Sequence[Trace],
-                 batch_spans: Sequence[Span] = ()) -> int:
+                 batch_spans: Sequence[Span] = (),
+                 control_spans: Sequence[Span] = ()) -> int:
     """Write a chrome://tracing / Perfetto-loadable JSON file; returns
     the number of events written."""
-    events = to_chrome_events(traces, batch_spans)
+    events = to_chrome_events(traces, batch_spans, control_spans)
     with open(path, "w") as f:
         json.dump({"traceEvents": events,
                    "displayTimeUnit": "ms"}, f)
@@ -119,7 +153,8 @@ def write_chrome(path: str, traces: Sequence[Trace],
 
 def export_chrome(tracer, path: str, dag: Optional[str] = None) -> int:
     """Export a tracer's kept traces (optionally one DAG's) plus the
-    batch spans they link to."""
+    batch spans they link to and every control-plane event."""
     traces = tracer.kept(dag)
     links = {s.link for t in traces for s in t.spans if s.link is not None}
-    return write_chrome(path, traces, tracer.batch_spans(links))
+    control = getattr(tracer, "control_events", lambda: [])()
+    return write_chrome(path, traces, tracer.batch_spans(links), control)

@@ -210,6 +210,10 @@ class Tracer:
         # kept trace's linked batch span is still resolvable at export
         self._batches: Deque[Span] = deque(
             maxlen=batch_capacity or 4 * self.capacity)
+        # control-plane events (autoscaler replica changes, blue/green
+        # swap phases) ride their own bounded ring
+        self._control: Deque[Span] = deque(
+            maxlen=batch_capacity or 4 * self.capacity)
         self._lock = threading.Lock()
         self._offered = 0
         self.started = 0
@@ -254,6 +258,29 @@ class Tracer:
             self._batches.append(s)
         return s
 
+    # -- control-plane events ------------------------------------------------
+    def control_event(self, name: str, t0: Optional[float] = None,
+                      t1: Optional[float] = None, **attrs) -> Optional[Span]:
+        """A control-plane span (``replan@dag`` phases, ``scale@pool``
+        replica changes): not tied to any request, kept in its own
+        bounded ring and exported on a separate track — so a during-swap
+        p99 blip lines up against the swap phase that caused it.  Instant
+        when only ``t0`` (or neither) is given."""
+        if not self.enabled:
+            return None
+        t0 = t0 if t0 is not None else now()
+        s = Span(name, t0, t1 if t1 is not None else t0, attrs or None)
+        with self._lock:
+            self._control.append(s)
+        return s
+
+    def control_events(self, kind: Optional[str] = None) -> List[Span]:
+        with self._lock:
+            spans = list(self._control)
+        if kind is not None:
+            spans = [s for s in spans if s.kind == kind]
+        return spans
+
     # -- reads ---------------------------------------------------------------
     def kept(self, dag: Optional[str] = None) -> List[Trace]:
         with self._lock:
@@ -273,9 +300,11 @@ class Tracer:
         with self._lock:
             self._kept.clear()
             self._batches.clear()
+            self._control.clear()
 
     def stats(self) -> Dict[str, int]:
         with self._lock:
             return {"started": self.started, "finished": self.finished,
                     "kept": self.kept_count, "buffered": len(self._kept),
-                    "batch_spans": len(self._batches)}
+                    "batch_spans": len(self._batches),
+                    "control_events": len(self._control)}

@@ -38,6 +38,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.obs import keys as okeys
 from repro.obs.attribution import attribute
 from repro.obs.clock import now as _mono
 from repro.profiling.estimator import FaultStats, LatencyEstimator, Workload
@@ -128,7 +129,7 @@ class SLOController:
         timestamps for this DAG."""
         snap = snapshot if snapshot is not None \
             else self.runtime.metrics_snapshot()
-        ts = snap.get(f"dag/{self.deployed.dag.name}/request_t", [])
+        ts = snap.get(okeys.dag(self.deployed.dag.name, "request_t"), [])
         if len(ts) < 2:
             return 0.0
         # window against NOW (same clock call_dag stamps), not the newest
@@ -153,7 +154,7 @@ class SLOController:
         name = self.deployed.dag.name
         now = _mono()
         lo = now - self.window_s
-        errs = sum(1 for t in snap.get(f"dag/{name}/error_t", [])
+        errs = sum(1 for t in snap.get(okeys.dag(name, "error_t"), [])
                    if t >= lo)
         if errs == 0:
             return 0.0
@@ -162,7 +163,8 @@ class SLOController:
         # latency — negligible at controller timescales).  An error burst
         # whose arrivals already left the window still reads as 100%.
         arrivals = sum(
-            1 for t in snap.get(f"dag/{name}/request_t", []) if t >= lo)
+            1 for t in snap.get(okeys.dag(name, "request_t"), [])
+            if t >= lo)
         return errs / max(1, errs, arrivals)
 
     #: retries outnumbering successful completions by this factor over
@@ -188,16 +190,16 @@ class SLOController:
         def count(key: str) -> int:
             return sum(1 for t in snap.get(key, []) if t >= lo)
 
-        retries = count(f"dag/{name}/retry_t")
+        retries = count(okeys.dag(name, "retry_t"))
         # successful completions carry a latency sample, not a timestamp;
         # window-total approximated by arrivals, as in error_rate
-        completions = count(f"dag/{name}/request_t")
+        completions = count(okeys.dag(name, "request_t"))
         w = max(self.window_s, 1e-9)
-        return {"crash_rate": count("faults/crash_t") / w,
-                "wedge_rate": count("faults/wedge_t") / w,
-                "requeue_rate": count("faults/requeued_t") / w,
+        return {"crash_rate": count(okeys.fault("crash")) / w,
+                "wedge_rate": count(okeys.fault("wedge")) / w,
+                "requeue_rate": count(okeys.FAULT_REQUEUED) / w,
                 "retry_rate": retries / w,
-                "hedge_rate": count(f"dag/{name}/hedge_t") / w,
+                "hedge_rate": count(okeys.dag(name, "hedge_t")) / w,
                 "storm": float(
                     retries > self.RETRY_STORM_FACTOR
                     * max(1, completions))}
@@ -224,8 +226,8 @@ class SLOController:
             if k.startswith(f"admission/{name}/")
             and k.endswith("/degraded_t"))
         w = max(self.window_s, 1e-9)
-        return {"shed_rate": count(f"dag/{name}/shed_t") / w,
-                "expired_rate": count(f"dag/{name}/expired_t") / w,
+        return {"shed_rate": count(okeys.dag(name, "shed_t")) / w,
+                "expired_rate": count(okeys.dag(name, "expired_t")) / w,
                 "degraded_rate": degraded / w}
 
     def refresh_profile(self) -> bool:
@@ -351,6 +353,14 @@ class SLOController:
             self._confirm_next = False
             confirm: Dict[str, Any] = {
                 "p99_ms": cur_pred.p99_s * 1e3, "slo_ok": slo_ok}
+            tracer = getattr(self.runtime, "tracer", None)
+            if tracer is not None and getattr(tracer, "enabled", False):
+                ce = getattr(tracer, "control_event", None)
+                if ce is not None:
+                    # the confirm verdict closes the swap lifecycle on
+                    # the control track (prepare/warm/canary/swap/confirm)
+                    ce(f"replan@{self.deployed.dag.name}", phase="confirm",
+                       ok=slo_ok, p99_ms=cur_pred.p99_s * 1e3)
             if not slo_ok:
                 # green failed its confirm: roll back to blue
                 # automatically, and cool down so the very next tick does

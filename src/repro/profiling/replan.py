@@ -263,6 +263,19 @@ class BlueGreenReplanner:
     def __call__(self, proposal) -> ReplanReport:
         return self.replan(proposal)
 
+    def _phase_event(self, phase: str, t0: float, t1: float,
+                     **attrs) -> None:
+        """Control-plane span for one swap phase (prepare/warm/canary/
+        swap/confirm/rollback) — exported on the trace's control track
+        so a during-swap p99 blip is attributable to its phase."""
+        tracer = getattr(self.runtime, "tracer", None)
+        if tracer is None or not getattr(tracer, "enabled", False):
+            return
+        ce = getattr(tracer, "control_event", None)
+        if ce is not None:
+            ce(f"replan@{self.deployed.dag.name}", t0, t1, phase=phase,
+               **attrs)
+
     # -- phases --------------------------------------------------------------
     def _reference(self, blue_dag, rep: ReplanReport):
         """The output green must reproduce: blue's, for the same input
@@ -341,9 +354,12 @@ class BlueGreenReplanner:
                                  **self.compile_flags)
         except Exception as e:
             rep.reason = f"compile failed: {type(e).__name__}: {e}"
+            self._phase_event("prepare", t0, time.perf_counter(), ok=False)
             return rep
         rep.timings_s["compile"] = time.perf_counter() - t0
         rep.green_generation = green.dag.generation
+        self._phase_event("prepare", t0, time.perf_counter(), ok=True,
+                          green_generation=green.dag.generation)
 
         swapped = False
         try:
@@ -360,6 +376,8 @@ class BlueGreenReplanner:
             else:
                 rep.notes.append("no sample: warm skipped")
             rep.timings_s["warm"] = time.perf_counter() - t0
+            self._phase_event("warm", t0, time.perf_counter(),
+                              skipped=self.sample is None)
 
             # 3) canary-verify green end to end before traffic sees it
             rep.phase = "canary"
@@ -368,10 +386,16 @@ class BlueGreenReplanner:
                 if not self._canary(green, blue, rep):
                     rep.reason = ("canary failed — blue stays live: "
                                   + str(rep.canary.get("error")))
+                    self._phase_event("canary", t0, time.perf_counter(),
+                                      ok=False,
+                                      error=str(rep.canary.get("error")))
                     return rep
             else:
                 rep.notes.append("canary skipped")
             rep.timings_s["canary"] = time.perf_counter() - t0
+            self._phase_event("canary", t0, time.perf_counter(), ok=True,
+                              skipped=not (self.verify
+                                           and self.sample is not None))
 
             # 4) atomic swap: new requests -> green, in-flight finish on
             #    blue, blue's batchers drain and close on quiescence
@@ -396,6 +420,9 @@ class BlueGreenReplanner:
             if adm is not None:
                 adm.update(plan=green.plan, config=proposal)
             rep.timings_s["swap"] = time.perf_counter() - t0
+            self._phase_event("swap", t0, time.perf_counter(),
+                              green_generation=green.dag.generation,
+                              blue_generation=blue.generation)
             rep.phase = "done"
             rep.ok = True
             return rep
@@ -439,7 +466,11 @@ class BlueGreenReplanner:
             adm.update(plan=blue_plan)
         record = getattr(rt, "record_metric", None)
         if record is not None:
-            record("replan/rollback", time.perf_counter())
+            from repro.obs import keys as okeys
+            record(okeys.REPLAN_ROLLBACK, time.perf_counter())
+        t_rb = time.perf_counter()
+        self._phase_event("rollback", t_rb, t_rb, reason=reason,
+                          restored_generation=blue_dag.generation)
         report = {"rolled_back": True, "reason": reason,
                   "dag": blue_dag.name,
                   "restored_generation": blue_dag.generation}

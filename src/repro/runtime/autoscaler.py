@@ -36,10 +36,14 @@ class AutoscalerConfig:
 
 class Autoscaler:
     def __init__(self, pool: ExecutorPool, functions: Dict[str, str],
-                 cfg: Optional[AutoscalerConfig] = None):
-        """functions: fname -> resource_class to manage."""
+                 cfg: Optional[AutoscalerConfig] = None, *, tracer=None):
+        """functions: fname -> resource_class to manage.  ``tracer`` (a
+        ``repro.obs.trace.Tracer``) receives a control-plane event per
+        replica add/remove/replace, so scaling actions line up against
+        request latency in trace exports."""
         self.pool = pool
         self.functions = functions
+        self.tracer = tracer
         self.cfg = cfg or AutoscalerConfig()
         self._stop = False
         self.history: List[Dict[str, int]] = []
@@ -69,6 +73,11 @@ class Autoscaler:
         with self._targets_lock:
             self._targets.pop(fname, None)
 
+    def _event(self, action: str, fname: str, **attrs) -> None:
+        if self.tracer is not None:
+            self.tracer.control_event(f"scale@{fname}", action=action,
+                                      **attrs)
+
     def target(self, fname: str) -> Optional[int]:
         with self._targets_lock:
             return self._targets.get(fname)
@@ -80,13 +89,18 @@ class Autoscaler:
         spike's replicas settle with the paper's observed slack."""
         c = self.cfg
         if n < target:
-            for _ in range(min(c.scale_up_count, target - n)):
+            added = min(c.scale_up_count, target - n)
+            for _ in range(added):
                 self.pool.add_replica(fname, rclass)
+            self._event("replica_add", fname, count=added, reason="target",
+                        replicas=n + added, target=target)
             self._idle_ticks[fname] = 0
         elif n > target + c.slack:
             self._idle_ticks[fname] += 1
             if self._idle_ticks[fname] >= 4:      # hysteresis
                 self.pool.remove_replica(fname)
+                self._event("replica_remove", fname, count=1,
+                            reason="target", replicas=n - 1, target=target)
                 self._idle_ticks[fname] = 0
         else:
             self._idle_ticks[fname] = 0
@@ -97,13 +111,18 @@ class Autoscaler:
         depth = self.pool.queue_depth(fname, rclass)
         per = depth / n
         if per > c.scale_up_depth and n < c.max_replicas:
-            for _ in range(min(c.scale_up_count, c.max_replicas - n)):
+            added = min(c.scale_up_count, c.max_replicas - n)
+            for _ in range(added):
                 self.pool.add_replica(fname, rclass)
+            self._event("replica_add", fname, count=added, reason="depth",
+                        replicas=n + added, depth=depth)
             self._idle_ticks[fname] = 0
         elif per < c.scale_down_idle and n > c.min_replicas + c.slack:
             self._idle_ticks[fname] += 1
             if self._idle_ticks[fname] >= 8:       # hysteresis
                 self.pool.remove_replica(fname)
+                self._event("replica_remove", fname, count=1,
+                            reason="idle", replicas=n - 1, depth=depth)
                 self._idle_ticks[fname] = 0
         else:
             self._idle_ticks[fname] = 0
@@ -122,9 +141,15 @@ class Autoscaler:
                 # candidates() away from the pool-wide default executors.
                 if fname in self.pool.assignment:
                     n0 = self.pool.replica_count(fname)
+                    replaced = 0
                     while n0 < self.cfg.min_replicas:
                         self.pool.add_replica(fname, rclass)
                         n0 += 1
+                        replaced += 1
+                    if replaced:
+                        self._event("replica_replace", fname,
+                                    count=replaced, reason="failed_floor",
+                                    replicas=n0)
                 n = max(1, self.pool.replica_count(fname))
                 target = self.target(fname)
                 if target is not None:

@@ -110,8 +110,16 @@ class RuntimeDag:
                      and all(getattr(c, "device_resident", False)
                              and not c.wait_any and not c.batching
                              and len(c.inputs) == 1 for c in cons))
-            # sole consumer -> nobody else holds the buffers: donate them
-            donate = emits and len(cons) == 1
+            # sole consumer -> nobody else holds the buffers: donate them.
+            # An explicit IR annotation overrides the derived default —
+            # donate=False pins buffers (debugging/aliasing-hostile
+            # backends); donate=True forces donation and is audited by
+            # the static verifier (CF201: donating a shared edge deletes
+            # buffers a sibling consumer still needs).  Donation is only
+            # meaningful on an emitting device edge either way.
+            explicit = getattr(o, "donate", None)
+            donate = (emits and bool(explicit)) if explicit is not None \
+                else (emits and len(cons) == 1)
             fn = wrap_device(o.op, emits, donate) if batched else wrap(o.op)
             nodes[nm] = RuntimeNode(
                 name=nm, fn=fn,

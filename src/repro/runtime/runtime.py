@@ -20,6 +20,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.lowering import DEFAULT_BUCKETS, DegradePolicy, bucket_rows
 from repro.core.table import DeviceTable, Table
+from repro.obs import keys as okeys
 from repro.obs.clock import now as _mono
 from repro.obs.metrics import Histogram, HistogramSnapshot, WindowedCounter
 from repro.obs.trace import Trace, Tracer
@@ -469,9 +470,9 @@ class Runtime:
         SLO controller folds into ``fault_rate`` — kept SEPARATE from
         ``error_t``: a recovered fault is not a request failure."""
         now = _mono()
-        self.record_metric(f"faults/{kind}_t", now)
+        self.record_metric(okeys.fault(kind), now)
         for _ in range(n_requeued):
-            self.record_metric("faults/requeued_t", now)
+            self.record_metric(okeys.FAULT_REQUEUED, now)
 
     def set_fault_plan(self, plan: Optional[FaultPlan]) -> \
             Optional[FaultInjector]:
@@ -536,8 +537,8 @@ class Runtime:
                         deadline_t=work.deadline_t, rng=self._retry_rng)
                     if delay is not None:
                         if dag_name:
-                            self.record_metric(f"dag/{dag_name}/retry_t",
-                                               _mono())
+                            self.record_metric(
+                                okeys.dag(dag_name, "retry_t"), _mono())
                         for tr in traces:
                             tr.event(f"retry@{node.name}",
                                      attempt=work.attempt + 1,
@@ -577,8 +578,8 @@ class Runtime:
                     if not others:
                         return
                     if dag_name:
-                        self.record_metric(f"dag/{dag_name}/hedge_t",
-                                           _mono())
+                        self.record_metric(
+                            okeys.dag(dag_name, "hedge_t"), _mono())
                     for tr in traces:
                         tr.event(f"hedge_launch@{node.name}",
                                  delay_s=hedge_delay)
@@ -677,8 +678,7 @@ class Runtime:
             b = self._batchers.get(key)
             if b is None:
                 cfg = self._node_batch_cfg.get((dag_name, node.name), {})
-                mkey = f"batch/{dag_name}/{node.name}" if dag_name \
-                    else f"batch/{node.name}"
+                mkey = okeys.batch_prefix(dag_name, node.name)
 
                 def _drop(args, err, _mkey=mkey, _node=node.name):
                     # a submit can slip in between the sweep's quiescence
@@ -687,7 +687,8 @@ class Runtime:
                     # forever (nobody waits on Batcher item events here).
                     # Deadline expiries land here too; count them.
                     if isinstance(err, DeadlineExceeded):
-                        self.record_metric(f"{_mkey}/expired_t", _mono())
+                        self.record_metric(okeys.batch(_mkey, "expired_t"),
+                                           _mono())
                     d_ctx = args[4]
                     if d_ctx is not None and d_ctx.trace is not None:
                         # the request died waiting in the batcher: close
@@ -789,16 +790,15 @@ class Runtime:
             # node name don't interleave their histograms (generations of
             # one DAG intentionally share a series — the controller reads
             # one continuous signal across a blue/green swap)
-            mkey = f"batch/{dag_name}/{node.name}" if dag_name \
-                else f"batch/{node.name}"
+            mkey = okeys.batch_prefix(dag_name, node.name)
 
             def demux(result, error, exec_id):
                 t_done = _mono()
                 lat = t_done - t_submit
-                self.record_metric(f"{mkey}/size", len(big.rows))
-                self.record_metric(f"{mkey}/latency_s", lat)
+                self.record_metric(okeys.batch(mkey, "size"), len(big.rows))
+                self.record_metric(okeys.batch(mkey, "latency_s"), lat)
                 if item.exec_s is not None:
-                    self.record_metric(f"{mkey}/exec_s",
+                    self.record_metric(okeys.batch(mkey, "exec_s"),
                                        item.exec_s)
                 if traced:
                     # ONE batch-level span held by the tracer; every
@@ -974,8 +974,9 @@ class Runtime:
                 # error_t): the controller must distinguish "overloaded
                 # and shedding by design" from "failing".
                 now = _mono()
-                self.record_metric(f"dag/{name}/shed_t", now)
-                self.record_metric(f"admission/{name}/{kname}/shed_t", now)
+                self.record_metric(okeys.dag(name, "shed_t"), now)
+                self.record_metric(okeys.admission(name, kname, "shed_t"),
+                                   now)
                 if tr is not None:
                     tr.finish(shed=True, shed_reason=d.reason)
                 fut = Future()
@@ -985,8 +986,8 @@ class Runtime:
                     estimate_s=d.estimate_s, deadline_s=deadline_s))
                 return fut
             if d.action == "degrade":
-                self.record_metric(f"admission/{name}/{kname}/degraded_t",
-                                   _mono())
+                self.record_metric(
+                    okeys.admission(name, kname, "degraded_t"), _mono())
             ctx = RequestContext(klass=kname, degrade=d.degrade)
         elif tr is not None:
             # no gate installed: a zero-cost marker so every exported
@@ -1025,7 +1026,7 @@ class Runtime:
             # arrival + end-to-end latency series: what the SLO
             # controller's rate estimate and the benchmark's measured p99
             # read back
-            self.record_metric(f"dag/{name}/request_t", t0)
+            self.record_metric(okeys.dag(name, "request_t"), t0)
 
             def _record(f: Future):
                 lat = _mono() - t0
@@ -1034,16 +1035,19 @@ class Runtime:
                 except BaseException as e:
                     exc = e
                 if exc is None:
-                    self.record_metric(f"dag/{name}/latency_s", lat)
+                    self.record_metric(okeys.dag(name, "latency_s"), lat)
                 elif isinstance(exc, DeadlineExceeded):
                     # admitted but its deadline passed in a queue: an
                     # EXPIRY, not an error — the request failed fast by
                     # design, in a fraction of its budget
-                    self.record_metric(f"dag/{name}/expired_t", _mono())
-                    self.record_metric(f"dag/{name}/shed_latency_s", lat)
+                    self.record_metric(okeys.dag(name, "expired_t"),
+                                       _mono())
+                    self.record_metric(okeys.dag(name, "shed_latency_s"),
+                                       lat)
                 elif isinstance(exc, Overloaded):
-                    self.record_metric(f"dag/{name}/shed_t", _mono())
-                    self.record_metric(f"dag/{name}/shed_latency_s", lat)
+                    self.record_metric(okeys.dag(name, "shed_t"), _mono())
+                    self.record_metric(okeys.dag(name, "shed_latency_s"),
+                                       lat)
                 else:
                     # error-path latency goes to its OWN series plus an
                     # error counter whose values are completion
@@ -1052,8 +1056,9 @@ class Runtime:
                     # into latency_s — or dropping them, as we used to —
                     # makes the measured p99 improve exactly when the
                     # system degrades.
-                    self.record_metric(f"dag/{name}/error_latency_s", lat)
-                    self.record_metric(f"dag/{name}/error_t", _mono())
+                    self.record_metric(okeys.dag(name, "error_latency_s"),
+                                       lat)
+                    self.record_metric(okeys.dag(name, "error_t"), _mono())
                 if tr is not None:
                     # tail-based keep decision happens here, with the
                     # request's true outcome in hand

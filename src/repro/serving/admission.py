@@ -44,6 +44,7 @@ import threading
 from typing import Deque, Dict, Optional, Tuple
 
 from repro.core.lowering import DegradePolicy
+from repro.obs import keys as okeys
 from repro.obs.clock import now as _mono
 
 
@@ -314,10 +315,10 @@ class AdmissionController:
         if deadline_s is None:
             deadline_s = pol.default_deadline_s
         with self._lock:
-            self.counters[f"{name}/offered"] += 1
+            self.counters[okeys.gate_counter(name, "offered")] += 1
             bucket = self._buckets.get(name)
             if bucket is not None and not bucket.try_take():
-                self.counters[f"{name}/shed"] += 1
+                self.counters[okeys.gate_counter(name, "shed")] += 1
                 return Decision("shed", name, "rate_limit",
                                 deadline_s=deadline_s)
             self._note_arrival(name, now)
@@ -332,15 +333,15 @@ class AdmissionController:
                               and est - penalty <= deadline_s
                               else "deadline_risk")
                     if pol.degrade is not None:
-                        self.counters[f"{name}/degraded"] += 1
+                        self.counters[okeys.gate_counter(name, "degraded")] += 1
                         return Decision("degrade", name, reason,
                                         estimate_s=est,
                                         deadline_s=deadline_s,
                                         degrade=pol.degrade)
-                    self.counters[f"{name}/shed"] += 1
+                    self.counters[okeys.gate_counter(name, "shed")] += 1
                     return Decision("shed", name, reason,
                                     estimate_s=est, deadline_s=deadline_s)
-            self.counters[f"{name}/admitted"] += 1
+            self.counters[okeys.gate_counter(name, "admitted")] += 1
             return Decision("admit", name, "ok", estimate_s=est,
                             deadline_s=deadline_s)
 
@@ -356,7 +357,7 @@ class AdmissionController:
         pol = self.policy(klass)
         name = pol.name
         with self._lock:
-            self.counters[f"{name}/hedge_offered"] += 1
+            self.counters[okeys.gate_counter(name, "hedge_offered")] += 1
             self._note_arrival(name, now)
             if deadline_s is None:
                 deadline_s = pol.default_deadline_s
@@ -365,9 +366,9 @@ class AdmissionController:
                 est = self._p99_at(pol.priority, lam, now) \
                     + self._queue_penalty(now)
                 if est > deadline_s:
-                    self.counters[f"{name}/hedge_suppressed"] += 1
+                    self.counters[okeys.gate_counter(name, "hedge_suppressed")] += 1
                     return False
-            self.counters[f"{name}/hedge_admitted"] += 1
+            self.counters[okeys.gate_counter(name, "hedge_admitted")] += 1
             return True
 
     def snapshot(self) -> Dict[str, int]:

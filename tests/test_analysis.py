@@ -1,0 +1,671 @@
+"""Static plan verifier (repro.analysis): adversarial corpus + wiring.
+
+One deliberately broken plan per diagnostic code (CF101..CF502), each
+asserting the code fires EXACTLY once with an actionable hint; a
+zero-false-positive sweep over every shipped example/benchmark flow;
+compile_flow(verify=...) rejection before any XLA trace; CLI behavior;
+and the control-plane span events (autoscaler / blue-green phases).
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import (VerificationError, analyze, device_edge_info,
+                            pass_snapshot, verify_pass_step)
+from repro.analysis import cli as check_cli
+from repro.analysis.diagnostics import CODES, Diagnostic, Report
+from repro.analysis.infer import specs_from_table
+from repro.core import operators as ops
+from repro.core.compiler import compile_flow
+from repro.core.dataflow import Dataflow
+from repro.core.ir import PhysicalPlan
+from repro.core.lowering import EXECUTABLE_CACHE, BatchedJittedFuse
+from repro.core.operators import TypecheckError
+from repro.core.passes import PassContext, PassPipeline, build_pipeline
+from repro.core.table import Table
+from repro.kernels.ops import kernel_step
+from repro.obs import keys as K
+from repro.obs.export import to_chrome_events
+from repro.obs.trace import Tracer
+from repro.profiling.optimizer import NodeConfig, PlanConfig
+from repro.runtime.autoscaler import Autoscaler, AutoscalerConfig
+from repro.runtime.runtime import Runtime
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def one(report, code):
+    """Assert ``code`` fired exactly once with an actionable hint."""
+    diags = report.by_code(code)
+    assert len(diags) == 1, \
+        f"{code}: expected exactly 1, got {len(diags)}:\n{report.table()}"
+    d = diags[0]
+    assert d.hint, f"{code} has no fix hint"
+    assert d.severity == CODES[code][1]
+    return d
+
+
+# -- step functions (module-level so annotations survive) -------------------
+
+def _jid(x: jax.Array) -> jax.Array:
+    return x * 2
+
+
+def _jdot5(x: jax.Array) -> jax.Array:
+    return jnp.dot(x, jnp.ones((5, 5)))       # rejects 1-d [8] rows
+
+
+def _jbranch(x: jax.Array) -> jax.Array:
+    if x.sum() > 0:                           # data-dependent control flow
+        return x
+    return -x
+
+
+def _jreshape(x: jax.Array) -> jax.Array:
+    return x.reshape(2, 2)                    # row [4] -> [2, 2]
+
+
+def _pred_unannotated(x: jax.Array):
+    return x.sum() > 0
+
+
+def _pred_bool(x: jax.Array) -> bool:
+    return True
+
+
+def _nid(x: np.ndarray) -> np.ndarray:
+    return x
+
+
+def _nneg(x: np.ndarray) -> np.ndarray:
+    return -x
+
+
+def _gpu_chain(step2=_jid):
+    fl = Dataflow([("x", jax.Array)])
+    fl.output = (fl.map(_jid, names=["x"], gpu=True)
+                 .map(step2, names=["x"], gpu=True))
+    return fl
+
+
+def _fanout_flow():
+    """source -> a -> {b, c} -> union: op 1's edge fans out."""
+    fl = Dataflow([("x", np.ndarray)])
+    a = fl.map(_nid, names=["x"])
+    b = a.map(_nid, names=["x"])
+    c = a.map(_nneg, names=["x"])
+    fl.output = b.union(c)
+    return fl
+
+
+def _raw(fl):
+    return PhysicalPlan.from_dataflow(fl)
+
+
+def _compiled(fl, **kw):
+    return build_pipeline(**kw).run(_raw(fl), PassContext())
+
+
+# -- abstract interpretation (CF101/CF102/CF103/CF104) ----------------------
+
+def test_cf101_shape_mismatch_fires_once():
+    plan = _raw(_gpu_chain(_jdot5))
+    rep = analyze(plan, input_specs={
+        "x": jax.ShapeDtypeStruct((8,), jnp.float32)})
+    d = one(rep, "CF101")
+    assert not rep.ok
+    assert "rejects the inferred input shapes" in d.message
+
+
+def test_cf102_untraceable_step_fires_once():
+    plan = _raw(_gpu_chain(_jbranch))
+    rep = analyze(plan, input_specs={
+        "x": jax.ShapeDtypeStruct((8,), jnp.float32)})
+    d = one(rep, "CF102")
+    assert "not traceable" in d.message
+    assert not rep.by_code("CF101")           # classified, not conflated
+
+
+def test_cf103_kernel_tile_mismatch_fires_once():
+    # S=64: block_k=32 divides, block_q=48 does not -> exactly one problem
+    step = kernel_step("flash_attention", causal=True,
+                       block_q=48, block_k=32)
+    fl = Dataflow([("q", jax.Array), ("k", jax.Array), ("v", jax.Array)])
+    fl.output = fl.map(step, names=["o"], gpu=True)
+    spec = jax.ShapeDtypeStruct((2, 64, 16), jnp.float32)
+    rep = analyze(_raw(fl),
+                  input_specs={"q": spec, "k": spec, "v": spec})
+    d = one(rep, "CF103")
+    assert "block_q" in d.message and "block_k" not in d.message
+
+
+def test_cf103_skipped_without_shapes():
+    step = kernel_step("flash_attention", causal=True,
+                       block_q=48, block_k=32)
+    fl = Dataflow([("q", jax.Array), ("k", jax.Array), ("v", jax.Array)])
+    fl.output = fl.map(step, names=["o"], gpu=True)
+    assert analyze(_raw(fl)).ok               # no specs -> no false alarm
+
+
+def test_cf104_unannotated_filter_on_gpu_fires_once():
+    fl = Dataflow([("x", jax.Array)])
+    fl.output = (fl.map(_jid, names=["x"], gpu=True)
+                 .filter(_pred_unannotated, gpu=True))
+    rep = analyze(_raw(fl))
+    d = one(rep, "CF104")
+    assert rep.ok                             # warning, not error
+    assert "bool" in d.hint
+
+
+def test_annotated_bool_filter_is_clean():
+    fl = Dataflow([("x", jax.Array)])
+    fl.output = (fl.map(_jid, names=["x"], gpu=True)
+                 .filter(_pred_bool, gpu=True))
+    rep = analyze(_raw(fl))
+    assert not rep.by_code("CF104")
+
+
+def test_filter_rejects_nonbool_annotation():
+    def bad(x: jax.Array) -> int:
+        return 1
+    with pytest.raises(TypecheckError):
+        ops.Filter(bad)
+
+
+# -- IR invariants (CF2xx) --------------------------------------------------
+
+def test_cf201_donated_fanout_fires_once():
+    plan = _raw(_fanout_flow())
+    plan = plan.with_ops([o.replace(donate=True) if o.op_id == 1 else o
+                          for o in plan.ops])
+    rep = analyze(plan)
+    d = one(rep, "CF201")
+    assert d.op_id == 1
+    assert "2 consumers" in d.message
+
+
+def test_cf202_device_edge_crossing_classes_fires_once():
+    plan = _compiled(_gpu_chain(), plan_config=PlanConfig())
+    assert isinstance(plan.op(1).op, BatchedJittedFuse)
+    assert isinstance(plan.op(2).op, BatchedJittedFuse)
+    # residency analysis agrees with the runtime: 1->2 is a device edge
+    emits, donate = device_edge_info(plan)[1]
+    assert emits and donate
+    broken = plan.with_ops([o.replace(placement="cpu") if o.op_id == 2
+                            else o for o in plan.ops])
+    d = one(analyze(broken), "CF202")
+    assert d.edge == (1, 2)
+
+
+def test_cf203_wait_any_single_input_is_an_error():
+    plan = _raw(_gpu_chain())
+    plan = plan.with_ops([o.replace(wait_any=True) if o.op_id == 2 else o
+                          for o in plan.ops])
+    d = one(analyze(plan), "CF203")
+    assert d.severity == "error"
+    assert "race" in d.message
+
+
+def test_cf203_unraced_replicas_is_a_warning():
+    plan = _raw(_gpu_chain())
+    plan = plan.with_ops([o.replace(replicas=3) if o.op_id == 1 else o
+                          for o in plan.ops])
+    rep = analyze(plan)
+    diags = rep.by_code("CF203")
+    assert len(diags) == 1 and diags[0].severity == "warning"
+    assert rep.ok
+
+
+def test_cf204_bucket_table_below_max_batch_fires_once():
+    def batched(x: jax.Array) -> jax.Array:
+        return x + 1
+    fl = Dataflow([("x", jax.Array)])
+    fl.output = (fl.map(_jid, names=["x"], gpu=True, batching=True)
+                 .map(batched, names=["x"], gpu=True, batching=True))
+    cfg = PlanConfig(nodes={2: NodeConfig(max_batch=8,
+                                          batch_buckets=(1, 2))})
+    plan = _compiled(fl, fusion=True, plan_config=cfg)
+    fused = [o for o in plan.ops if isinstance(o.op, BatchedJittedFuse)]
+    assert len(fused) == 1 and fused[0].op.bucket_sizes == (1, 2)
+    rep = analyze(plan, plan_config=cfg)
+    d = one(rep, "CF204")
+    # a full merge of 8 pads past the top bucket (2); hint names the fix
+    assert "8" in d.hint
+
+
+def test_cf204_clean_when_buckets_cover():
+    def batched(x: jax.Array) -> jax.Array:
+        return x + 1
+    fl = Dataflow([("x", jax.Array)])
+    fl.output = (fl.map(_jid, names=["x"], gpu=True, batching=True)
+                 .map(batched, names=["x"], gpu=True, batching=True))
+    cfg = PlanConfig(nodes={2: NodeConfig(max_batch=8,
+                                          batch_buckets=(1, 4, 8))})
+    plan = _compiled(fl, fusion=True, plan_config=cfg)
+    assert not analyze(plan, plan_config=cfg).by_code("CF204")
+
+
+def test_cf205_zero_executor_class_fires_once():
+    rt = Runtime(n_cpu=1, n_gpu=0)
+    try:
+        d = one(analyze(_raw(_gpu_chain()), runtime=rt), "CF205")
+        assert "'gpu'" in d.message
+    finally:
+        rt.stop()
+
+
+def test_cf206_all_reserved_class_fires_once():
+    rt = Runtime(n_cpu=1, n_gpu=0)
+    try:
+        rt.pool.add_executor("gpu", reserved=True)
+        rep = analyze(_raw(_gpu_chain()), runtime=rt)
+        d = one(rep, "CF206")
+        assert "reserved" in d.message
+        assert not rep.by_code("CF205")
+    finally:
+        rt.stop()
+
+
+# -- resource bounds (CF301) ------------------------------------------------
+
+def _big_row_flow():
+    def grow(x: jax.Array) -> jax.Array:
+        return jnp.concatenate([x, x])
+    fl = Dataflow([("x", jax.Array)])
+    fl.output = (fl.map(_jid, names=["x"], gpu=True, batching=True)
+                 .map(grow, names=["x"], gpu=True, batching=True))
+    return fl
+
+
+def test_cf301_over_budget_footprint_fires_once():
+    plan = _compiled(_big_row_flow(), fusion=True)
+    sample = Table([("x", jax.Array)], [(np.zeros(1024, np.float32),)])
+    rep = analyze(plan, sample=sample, budget_bytes=64 << 10)
+    d = one(rep, "CF301")
+    assert "MiB" in d.message and "budget" in d.message
+
+
+def test_cf301_clean_under_budget():
+    plan = _compiled(_big_row_flow(), fusion=True)
+    sample = Table([("x", jax.Array)], [(np.zeros(1024, np.float32),)])
+    assert analyze(plan, sample=sample, budget_bytes=1 << 30).ok
+
+
+# -- observability lint (CF401) ---------------------------------------------
+
+def test_cf401_unknown_metric_key_fires_once():
+    fl = Dataflow([("x", int)])
+
+    def inc(x: int) -> int:
+        return x + 1
+    fl.output = fl.map(inc, names=["x"])
+    rt = Runtime(n_cpu=1)
+    try:
+        rt.record_metric(K.dag("demo", "latency_s"), 0.01)   # registered
+        rt.record_metric("bogus/unknown_series", 1.0)        # typo'd
+        rep = analyze(_raw(fl), runtime=rt)
+        d = one(rep, "CF401")
+        assert "bogus/unknown_series" in d.message
+        assert rep.ok                                        # warning
+    finally:
+        rt.stop()
+
+
+def test_key_registry_grammar():
+    assert K.known_key(K.dag("f", "latency_s"))
+    assert K.known_key(K.batch(K.batch_prefix("f", "n/sub"), "size"))
+    assert K.known_key(K.admission("f", "interactive", "shed_t"))
+    assert K.known_key(K.fault("crash"))
+    assert not K.known_key("dag/f/latency")       # wrong suffix
+    assert not K.known_key("bogus/unknown_series")
+
+
+# -- pipeline self-verification (CF501/CF502) -------------------------------
+
+class _StampDonateFanOut:
+    """A deliberately broken pass: forces donation on fan-out edges."""
+    name = "stamp-donate"
+
+    def run(self, plan, ctx):
+        fanout = {}
+        for o in plan.ops:
+            for i in o.inputs:
+                fanout[i] = fanout.get(i, 0) + 1
+        return plan.with_ops([o.replace(donate=True)
+                              if fanout.get(o.op_id, 0) > 1 else o
+                              for o in plan.ops])
+
+
+def test_cf501_pass_introducing_errors_fails_the_compile():
+    pp = PassPipeline([_StampDonateFanOut()], verify=True)
+    with pytest.raises(VerificationError) as ei:
+        pp.run(_raw(_fanout_flow()), PassContext())
+    msg = str(ei.value)
+    assert "CF501" in msg and "stamp-donate" in msg
+    assert len(ei.value.report.by_code("CF501")) == 1
+
+
+def test_cf502_pass_changing_edge_types_fails_the_compile():
+    def renamed(x: jax.Array) -> jax.Array:
+        return x
+
+    class Rename:
+        name = "rename"
+
+        def run(self, plan, ctx):
+            return plan.with_ops([
+                o.replace(op=ops.Map(renamed, ["y"])) if o.op_id == 2
+                else o for o in plan.ops])
+
+    pp = PassPipeline([Rename()], verify=True)
+    with pytest.raises(VerificationError) as ei:
+        pp.run(_raw(_gpu_chain()), PassContext())
+    msg = str(ei.value)
+    assert "CF502" in msg and "rename" in msg
+    assert len(ei.value.report.by_code("CF502")) == 1
+
+
+def test_verified_pipeline_accepts_the_real_passes():
+    pp = build_pipeline(fusion=True, verify=True)
+    plan = pp.run(_raw(_gpu_chain()), PassContext())
+    assert any(isinstance(o.op, BatchedJittedFuse) for o in plan.ops)
+
+
+def test_verify_pass_step_returns_next_snapshot():
+    plan = _raw(_gpu_chain())
+    snap = pass_snapshot(plan)
+    snap2 = verify_pass_step("noop", plan, snap)
+    assert snap2[1] == snap[1]                # identical edge signature
+
+
+# -- compile_flow(verify=...) rejects BEFORE any XLA trace ------------------
+
+def test_compile_flow_rejects_donated_fanout_before_trace():
+    rt = Runtime(n_cpu=1)
+    try:
+        pipeline = PassPipeline(build_pipeline(fusion=True).passes
+                                + [_StampDonateFanOut()])
+        t0 = EXECUTABLE_CACHE.traces()
+        with pytest.raises(VerificationError) as ei:
+            compile_flow(_fanout_flow(), rt, pipeline=pipeline,
+                         verify="error", name="donated-fanout")
+        assert ei.value.report.by_code("CF201")
+        assert EXECUTABLE_CACHE.traces() == t0    # rejected pre-XLA
+        assert "donated-fanout" not in rt.dags
+    finally:
+        rt.stop()
+
+
+def test_compile_flow_rejects_over_budget_before_trace():
+    rt = Runtime(n_cpu=1, n_gpu=1)
+    try:
+        sample = Table([("x", jax.Array)], [(np.zeros(1024, np.float32),)])
+        t0 = EXECUTABLE_CACHE.traces()
+        with pytest.raises(VerificationError) as ei:
+            compile_flow(_big_row_flow(), rt, fusion=True, verify=True,
+                         verify_input=sample, verify_budget_bytes=64 << 10,
+                         name="over-budget")
+        assert ei.value.report.by_code("CF301")
+        assert EXECUTABLE_CACHE.traces() == t0
+        assert "over-budget" not in rt.dags
+    finally:
+        rt.stop()
+
+
+def test_compile_flow_verify_warn_attaches_report_and_serves():
+    rt = Runtime(n_cpu=1, n_gpu=1)
+    try:
+        sample = Table([("x", jax.Array)], [(np.zeros(16, np.float32),)])
+        dep = compile_flow(_gpu_chain(), rt, fusion=True, verify="warn",
+                           verify_input=sample, name="warned")
+        assert dep.verification is not None and dep.verification.ok
+        out = dep.execute(sample).result(timeout=30)
+        np.testing.assert_allclose(np.asarray(out.rows[0].values[0]),
+                                   np.zeros(16))
+    finally:
+        rt.stop()
+
+
+# -- regressions: crashes found linting the shipped flows -------------------
+
+def test_lookup_fused_chain_does_not_crash_analysis():
+    """Locality fusion merges a Lookup into its consumer chain; the
+    verifier must skip (not crash on) the annotation-less sub-op."""
+    def key_of(x: int) -> tuple[int, str]:
+        return x, f"k{x}"
+
+    def use(x: int, key: str, lookup) -> int:
+        return x
+
+    fl = Dataflow([("x", int)])
+    fl.output = (fl.map(key_of, names=["x", "key"])
+                 .lookup("key", column=True)
+                 .map(use, names=["x"]))
+    plan = _compiled(fl, fusion=True, locality=True)
+    assert any(isinstance(o.op, ops.Fuse) and
+               any(isinstance(s, ops.Lookup) for s in o.op.ops)
+               for o in plan.ops)
+    rep = analyze(plan, sample=Table([("x", int)], [(1,)]))
+    assert rep.ok
+
+
+def test_kernel_tile_check_skips_fused_groupby():
+    """A fused chain carrying a GroupBy sub-op has steps without ``fn``;
+    KernelTileCheck must not crash and must not guess shapes past it."""
+    def tag(x: jax.Array) -> tuple[int, jax.Array]:
+        return 0, x
+
+    fl = Dataflow([("x", jax.Array)])
+    fl.output = fl.map(tag, names=["g", "x"]).groupby("g").agg("sum", "x")
+    plan = _compiled(fl, fusion=True)
+    assert any(isinstance(o.op, ops.Fuse) and
+               any(isinstance(s, ops.GroupBy) for s in o.op.ops)
+               for o in plan.ops)
+    rep = analyze(plan, input_specs={
+        "x": jax.ShapeDtypeStruct((4,), jnp.float32)})
+    assert rep.ok
+
+
+def test_bucket_walk_adds_batch_dim_exactly_once():
+    """Regression: the bucketed re-walk used to prepend the batch dim at
+    EVERY step, so shape-sensitive step 2+ saw a doubled batch dim."""
+    fl = Dataflow([("x", jax.Array)])
+    fl.output = (fl.map(_jid, names=["x"], gpu=True, batching=True)
+                 .map(_jreshape, names=["x"], gpu=True, batching=True))
+    plan = _compiled(fl, fusion=True)
+    assert any(isinstance(o.op, BatchedJittedFuse) for o in plan.ops)
+    rep = analyze(plan, input_specs={
+        "x": jax.ShapeDtypeStruct((4,), jnp.float32)})
+    assert not rep.by_code("CF101"), rep.table()
+
+
+def test_array_annotation_is_public():
+    from repro.core.lowering import array_annotation
+    assert array_annotation(jax.Array)
+    assert not array_annotation(np.ndarray)   # numpy steps stay eager
+    assert not array_annotation(int)
+
+
+def test_stage_input_specs_drive_model_stage_inference():
+    from repro.configs import get_tiny_config
+    from repro.models.registry import (build_model, model_stage_op,
+                                       stage_input_specs)
+    model = build_model(get_tiny_config("yi-9b"))
+    params = model.init(jax.random.PRNGKey(0))
+    pre = model_stage_op(model, params, "prefill", seq_len=8, cache_len=16,
+                         measure=False)
+    dec = model_stage_op(model, params, "decode", seq_len=8, cache_len=16,
+                         measure=False)
+    specs = stage_input_specs(model, "decode", seq_len=8, cache_len=16)
+    assert list(specs) == list(dec.names)      # column contract agrees
+    fl = Dataflow([("tokens", jax.Array)])
+    fl.output = fl.apply_op(pre, gpu=True).apply_op(dec, gpu=True)
+    rep = analyze(_raw(fl), input_specs=stage_input_specs(
+        model, "prefill", seq_len=8, cache_len=16))
+    assert rep.ok, rep.table()
+
+
+# -- zero false positives over everything we ship ---------------------------
+
+def test_shipped_flows_have_zero_errors():
+    if str(REPO_ROOT) not in sys.path:
+        sys.path.insert(0, str(REPO_ROOT))    # benchmarks.common import
+    paths = check_cli.discover([str(REPO_ROOT / "examples"),
+                                str(REPO_ROOT / "benchmarks")])
+    assert paths, "no example/benchmark modules discovered"
+    n_flows = 0
+    for path in paths:
+        reports = check_cli.check_module(path)
+        if reports is None:
+            continue
+        for name, report in reports:
+            n_flows += 1
+            assert report.ok, \
+                f"{path.name}:{name} has errors:\n{report.table()}"
+    assert n_flows >= 20      # every shipped flow stays opted in
+
+
+# -- CLI ---------------------------------------------------------------------
+
+def test_cli_list_codes(capsys):
+    assert check_cli.main(["--list-codes"]) == 0
+    out = capsys.readouterr().out
+    for code in CODES:
+        assert code in out
+
+
+_BROKEN_MODULE = '''
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core.dataflow import Dataflow
+from repro.core.table import Table
+
+def _a(x: jax.Array) -> jax.Array:
+    return x * 2
+
+def _b(x: jax.Array) -> jax.Array:
+    return jnp.dot(x, jnp.ones((5, 5)))
+
+def check_flows():
+    fl = Dataflow([("x", jax.Array)])
+    fl.output = (fl.map(_a, names=["x"], gpu=True)
+                 .map(_b, names=["x"], gpu=True))
+    return [{"name": "broken", "flow": fl, "compile": {},
+             "sample": Table([("x", jax.Array)],
+                             [(np.zeros(8, np.float32),)])}]
+'''
+
+
+def test_cli_exit_1_on_error_diagnostics(tmp_path, capsys):
+    mod = tmp_path / "broken_flow.py"
+    mod.write_text(_BROKEN_MODULE)
+    assert check_cli.main([str(mod)]) == 1
+    out = capsys.readouterr().out
+    assert "CF101" in out and "1 error(s)" in out
+
+
+def test_cli_exit_1_on_crashed_module(tmp_path):
+    mod = tmp_path / "crashy.py"
+    mod.write_text("raise RuntimeError('broken import')\n")
+    assert check_cli.main([str(mod)]) == 1
+
+
+def test_cli_skips_hookless_modules(tmp_path, capsys):
+    (tmp_path / "plain.py").write_text("X = 1\n")
+    assert check_cli.main([str(tmp_path / "plain.py")]) == 0
+    assert "checked 0 flow(s)" in capsys.readouterr().out
+
+
+# -- diagnostics plumbing ----------------------------------------------------
+
+def test_unknown_code_rejected():
+    with pytest.raises(ValueError):
+        Diagnostic("CF999", "nope")
+
+
+def test_report_table_and_ordering():
+    r = Report("demo")
+    r.add(Diagnostic("CF204", "later", op_id=2))
+    r.add(Diagnostic("CF201", "first", op_id=1, hint="drop donate"))
+    assert [d.code for d in r.sorted()] == ["CF201", "CF204"]
+    t = r.table()
+    assert "1 error(s), 1 warning(s)" in t and "drop donate" in t
+
+
+def test_specs_from_table_skips_non_numeric_columns():
+    t = Table([("url", str), ("x", jax.Array)],
+              [("img://cat.jpg", np.zeros((3, 4), np.float32))])
+    specs = specs_from_table(t)
+    assert specs["url"] is None
+    assert specs["x"].shape == (3, 4)
+
+
+# -- control-plane span events (autoscaler / blue-green attribution) --------
+
+class _StubPool:
+    def __init__(self):
+        self.added = []
+        self.removed = []
+
+    def add_replica(self, fname, rclass):
+        self.added.append((fname, rclass))
+
+    def remove_replica(self, fname):
+        self.removed.append(fname)
+
+
+def test_autoscaler_emits_replica_change_events():
+    tr = Tracer()
+    pool = _StubPool()
+    sc = Autoscaler(pool, {"f": "cpu"}, AutoscalerConfig(), tracer=tr)
+    sc._tick_target("f", "cpu", 1, 5)         # below target: scale up
+    assert len(pool.added) == 4
+    for _ in range(4):                        # hysteresis, then trim
+        sc._tick_target("f", "cpu", 9, 5)
+    assert pool.removed == ["f"]
+    evs = tr.control_events(kind="scale")
+    assert [e.attrs["action"] for e in evs] == ["replica_add",
+                                                "replica_remove"]
+    assert evs[0].attrs["count"] == 4 and evs[0].attrs["target"] == 5
+
+
+def test_replanner_emits_swap_phase_events():
+    from types import SimpleNamespace
+
+    from repro.profiling.replan import BlueGreenReplanner
+    tr = Tracer()
+    stub = SimpleNamespace(
+        runtime=SimpleNamespace(tracer=tr),
+        deployed=SimpleNamespace(dag=SimpleNamespace(name="demo")))
+    for phase in ("prepare", "warm", "canary", "swap"):
+        BlueGreenReplanner._phase_event(stub, phase, 1.0, 2.0, ok=True)
+    evs = tr.control_events(kind="replan")
+    assert [e.attrs["phase"] for e in evs] == ["prepare", "warm",
+                                               "canary", "swap"]
+    assert all(e.name == "replan@demo" for e in evs)
+
+
+def test_control_events_ring_and_export():
+    tr = Tracer()
+    tr.control_event("replan@d", 1.0, 2.0, phase="swap")
+    tr.control_event("scale@f", 3.0, action="replica_add")   # instant
+    assert tr.stats()["control_events"] == 2
+    events = to_chrome_events([], [], tr.control_events())
+    control = [e for e in events if e.get("cat") == "control"]
+    assert {e["ph"] for e in control} == {"X", "i"}          # span + marker
+    assert all(e["pid"] == 3 for e in control)
+    tids = {e["name"]: e["tid"] for e in control}
+    assert tids["replan@d"] != tids["scale@f"]   # one track per kind
+    tr.clear()
+    assert tr.stats()["control_events"] == 0
+
+
+def test_disabled_tracer_drops_control_events():
+    tr = Tracer(enabled=False)
+    assert tr.control_event("replan@d", 1.0, 2.0) is None
+    assert tr.control_events() == []
